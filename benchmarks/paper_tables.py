@@ -1,0 +1,127 @@
+"""Benchmarks mirroring every Ringo table (paper §3), CPU-scaled.
+
+The paper's machine is an 80-hyperthread 1 TB box on LiveJournal (69 M
+edges) and Twitter2010 (1.5 B edges); this container is one CPU core, so
+each benchmark runs an R-MAT graph / synthetic table sized to finish in
+seconds and reports the same **rates** the paper reports (rows/s, edges/s)
+next to the paper's numbers for context.  The absolute comparison lives in
+EXPERIMENTS.md; the dry-run cells cover pod-scale structure.
+
+Tables:
+  2 — memory footprint of graph vs table objects
+  3 — parallel PageRank + triangle counting
+  4 — select / join rates
+  5 — table↔graph conversion rates
+  6 — "sequential" 3-core / SSSP / SCC
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.table import Table, INT, FLOAT
+from repro.core import algorithms as A
+from repro.core import relational as R
+from repro.core.convert import graph_to_edge_table, to_graph
+from repro.data.rmat import rmat_edges
+
+RESULTS: List[Tuple[str, float, str]] = []
+
+
+def timed(name: str, fn: Callable, derived: Callable[[float], str] = None,
+          repeat: int = 3):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, jax.Array) else None
+        best = min(best, time.perf_counter() - t0)
+    extra = derived(best) if derived else ""
+    RESULTS.append((name, best * 1e6, extra))
+    return out
+
+
+def _bench_graph(scale: int = 14, edge_factor: int = 16):
+    s, d = rmat_edges(scale=scale, edge_factor=edge_factor, seed=1)
+    keep = s != d
+    return Graph.from_edges(s[keep], d[keep], dedupe=True)
+
+
+def table2_memory() -> None:
+    g = _bench_graph()
+    et = graph_to_edge_table(g)
+    RESULTS.append(("table2.graph_bytes_per_edge",
+                    g.nbytes() / max(g.n_edges, 1) * 1e6 / 1e6,
+                    f"bytes/edge={g.nbytes()/max(g.n_edges,1):.1f} "
+                    f"(paper: ~9.4 LiveJournal graph)"))
+    RESULTS.append(("table2.table_bytes_per_row",
+                    et.nbytes() / max(len(et), 1) * 1e6 / 1e6,
+                    f"bytes/row={et.nbytes()/max(len(et),1):.1f} "
+                    f"(paper: ~16 LiveJournal table)"))
+
+
+def table3_algorithms() -> None:
+    g = _bench_graph()
+    e = g.n_edges
+    timed("table3.pagerank_10it", lambda: A.pagerank(g, n_iter=10),
+          lambda t: f"{10*e/t/1e6:.1f} Medge-iter/s "
+                    f"(paper LJ: {10*69e6/2.76/1e6:.0f})")
+    u = g.to_undirected()
+    timed("table3.triangles", lambda: jnp.asarray(A.triangle_count(u)),
+          lambda t: f"{u.n_edges/t/1e6:.2f} Medges/s "
+                    f"(paper LJ: {69e6/6.13/1e6:.1f})", repeat=1)
+
+
+def table4_tables(n_rows: int = 1_000_000) -> None:
+    rng = np.random.default_rng(0)
+    t = Table.from_columns({"k": INT, "v": FLOAT},
+                           {"k": rng.integers(0, 1 << 30, n_rows),
+                            "v": rng.normal(size=n_rows)})
+    pivot = int(np.sort(t.column_np("k"))[10_000])
+    timed("table4.select_10k", lambda: R.select(t, "k", "<", pivot),
+          lambda tm: f"{n_rows/tm/1e6:.1f} Mrows/s (paper LJ: 405.9)")
+    timed("table4.select_all_minus_10k", lambda: R.select(t, "k", ">=", pivot),
+          lambda tm: f"{n_rows/tm/1e6:.1f} Mrows/s (paper LJ: 575.0)")
+    keys_small = Table.from_columns(
+        {"k": INT}, {"k": rng.choice(t.column_np("k"), 10_000, replace=False)})
+    timed("table4.join_10k", lambda: R.join(t, keys_small, "k", "k"),
+          lambda tm: f"{(n_rows+10_000)/tm/1e6:.1f} Mrows/s (paper LJ: 109.5)")
+
+
+def table5_conversions() -> None:
+    g = _bench_graph()
+    et = graph_to_edge_table(g)
+    e = g.n_edges
+    timed("table5.table_to_graph", lambda: to_graph(et, "src", "dst",
+                                                    dedupe=False),
+          lambda t: f"{e/t/1e6:.2f} Medges/s (paper LJ: 13.0)", repeat=1)
+    timed("table5.graph_to_table", lambda: graph_to_edge_table(g),
+          lambda t: f"{e/t/1e6:.2f} Medges/s (paper LJ: 46.0)")
+
+
+def table6_sequential() -> None:
+    g = _bench_graph(scale=13)
+    timed("table6.3core", lambda: A.k_core(g, 3),
+          lambda t: f"n={g.n_nodes} e={g.n_edges} (paper LJ: 31.0s)",
+          repeat=1)
+    timed("table6.sssp", lambda: A.sssp(g, 0),
+          lambda t: f"(paper LJ: 7.4s)", repeat=1)
+    timed("table6.scc", lambda: A.strongly_connected_components(g),
+          lambda t: f"(paper LJ: 18.0s)", repeat=1)
+
+
+def run_all() -> List[Tuple[str, float, str]]:
+    table2_memory()
+    table3_algorithms()
+    table4_tables()
+    table5_conversions()
+    table6_sequential()
+    return RESULTS

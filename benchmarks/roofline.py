@@ -1,0 +1,129 @@
+"""Roofline analysis (deliverable (g)) over the dry-run JSONs.
+
+Per (arch × shape × mesh):
+    compute    = FLOPs_per_device / peak_FLOPs            (197 TF/s bf16)
+    memory     = HBM_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = Σ collective_bytes_per_device / link_bw  (~50 GB/s/link;
+                 ICI is bidirectional per axis — we charge the naive
+                 single-link rate, a conservative upper bound)
+
+FLOPs/bytes come from the scan-corrected HLO cost model (hlo_cost.py): XLA's
+cost_analysis counts while bodies once, which would understate 36–94-layer
+models by that factor.  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for
+train cells; 2·N(+attn) per token for serve cells.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--tag baseline] [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "dryrun_results")
+
+
+def model_flops_for(rec: Dict) -> float:
+    """Ideal model FLOPs for the whole step (global, not per-device)."""
+    kind = rec.get("kind", "train")
+    n_active = rec.get("active_params", rec.get("params", 0))
+    shape = rec["shape"]
+    toks = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+            "decode_32k": 128, "long_500k": 1}.get(shape, 0)
+    if kind == "train":
+        return 6.0 * n_active * toks
+    if kind == "prefill":
+        return 2.0 * n_active * toks
+    if kind == "decode":
+        return 2.0 * n_active * toks
+    if kind == "graph":
+        g = rec.get("graph", {})
+        # PageRank SpMV: 2 flops/edge + damping per node
+        return 2.0 * g.get("n_edges", 0) + 3.0 * g.get("n_nodes", 0)
+    return 0.0
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_chips"]
+    fl = rec["flops_per_device"]
+    by = rec["bytes_per_device"]
+    coll = sum(rec.get("collective_bytes_per_device", {}).values())
+    compute_s = fl / PEAK_FLOPS
+    memory_s = by / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_for(rec)
+    ratio = mf / (fl * n) if fl else 0.0
+    # roofline fraction: useful model flops per the time the dominant term
+    # implies (how close the step is to the compute roofline)
+    step_time = max(terms.values())
+    mfu = (mf / n) / (step_time * PEAK_FLOPS) if step_time > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "multi" if rec["multi_pod"] else "single",
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": fl * n,
+        "useful_ratio": ratio, "roofline_frac": mfu,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def load(tag: str, mesh: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"{tag}.*.json"))):
+        rec = json.load(open(f))
+        row = analyze(rec)
+        if row is None:
+            continue
+        if mesh and row["mesh"] != mesh:
+            continue
+        rows.append(row)
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    return (f"{r['arch']:26s} {r['shape']:13s} {r['mesh']:6s} "
+            f"{r['compute_s']*1e3:11.2f} {r['memory_s']*1e3:11.2f} "
+            f"{r['collective_s']*1e3:11.2f} {r['dominant']:10s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_frac']*100:6.1f}% "
+            f"{r['peak_gib']:7.2f}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--json", default=None, help="also dump rows to JSON")
+    args = ap.parse_args(argv)
+    rows = load(args.tag, args.mesh)
+    hdr = (f"{'arch':26s} {'shape':13s} {'mesh':6s} {'compute_ms':>11s} "
+           f"{'memory_ms':>11s} {'collect_ms':>11s} {'dominant':10s} "
+           f"{'useful':>7s} {'RLfrac':>7s} {'peakGiB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(fmt_row(r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

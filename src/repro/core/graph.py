@@ -1,0 +1,253 @@
+"""Graph data structure (Ringo §2.2) — static-shape dual CSR in JAX.
+
+Ringo represents a directed graph as a hash table of nodes, each node holding
+two *sorted adjacency vectors* (in- and out-neighbors).  The representation
+targets (a) fast neighborhood access for traversal and (b) dynamism.
+
+TPU/JAX adaptation (DESIGN.md §2): XLA has no pointer-stable hash tables, so
+we keep the *logical* structure — per-node sorted neighbor lists, both
+directions — in **padded CSR** form with densely renumbered node ids:
+
+    node_ids : (node_cap,)   original ids, ascending (padding = INT32_MAX)
+    out_ptr  : (node_cap+1,) CSR row pointers (out-adjacency)
+    out_idx  : (edge_cap,)   dense dst ids, sorted within each row
+    in_ptr   : (node_cap+1,)
+    in_idx   : (edge_cap,)   dense src ids, sorted within each row
+
+The hash-table lookup ``id -> node`` becomes ``searchsorted(node_ids, id)``
+(log n, vectorized over queries); updates are functional rebuilds via sorted
+merge (O(E log E), fully parallel) instead of O(deg) in-place edits.
+Capacities are power-of-two bucketed like tables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import next_capacity
+
+__all__ = ["Graph", "INVALID_ID"]
+
+INVALID_ID = np.iinfo(np.int32).max
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Graph:
+    """Directed graph with dense node ids [0, n_nodes) and dual CSR."""
+
+    n_nodes: int
+    n_edges: int
+    node_ids: jax.Array
+    out_ptr: jax.Array
+    out_idx: jax.Array
+    in_ptr: jax.Array
+    in_idx: jax.Array
+
+    # -- pytree ---------------------------------------------------------------
+    def tree_flatten(self):
+        leaves = (self.node_ids, self.out_ptr, self.out_idx, self.in_ptr, self.in_idx)
+        return leaves, (self.n_nodes, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        n_nodes, n_edges = aux
+        return cls(n_nodes, n_edges, *leaves)
+
+    # -- constructors ----------------------------------------------------------
+    @classmethod
+    def from_dense_edges(cls, src: jax.Array, dst: jax.Array, n_nodes: int,
+                         node_ids: Optional[jax.Array] = None) -> "Graph":
+        """Build from dense-id edge arrays (valid length = full length).
+
+        This is the core of the paper's **sort-first** algorithm (§2.4):
+        (1) copy the columns, (2) sort them, (3) compute neighbor counts
+        explicitly, (4) bulk-write adjacency — no contention, no estimates.
+        """
+        src = src.astype(jnp.int32)
+        dst = dst.astype(jnp.int32)
+        e = int(src.shape[0])
+        node_cap = next_capacity(max(n_nodes, 1))
+        edge_cap = next_capacity(max(e, 1))
+
+        if node_ids is None:
+            ids = jnp.where(jnp.arange(node_cap) < n_nodes,
+                            jnp.arange(node_cap, dtype=jnp.int32), INVALID_ID)
+        else:
+            ids = _pad_ids(node_ids, node_cap)
+
+        out_ptr, out_idx = _csr_from_pairs(src, dst, n_nodes, node_cap, edge_cap)
+        in_ptr, in_idx = _csr_from_pairs(dst, src, n_nodes, node_cap, edge_cap)
+        return cls(n_nodes=n_nodes, n_edges=e, node_ids=ids,
+                   out_ptr=out_ptr, out_idx=out_idx, in_ptr=in_ptr, in_idx=in_idx)
+
+    @classmethod
+    def from_edges(cls, src, dst, dedupe: bool = True,
+                   drop_self_loops: bool = False) -> "Graph":
+        """Build from raw (original-id) edge arrays; renumbers densely.
+
+        Node set = union of endpoint ids (paper §2.4: "Nodes V are defined by
+        unique values in columns S and D").
+        """
+        src = jnp.asarray(src, dtype=jnp.int32)
+        dst = jnp.asarray(dst, dtype=jnp.int32)
+        if drop_self_loops:
+            keep = src != dst
+            n_keep = int(jnp.sum(keep))
+            perm = jnp.argsort(~keep, stable=True)[:max(n_keep, 1)]
+            src, dst = src[perm][:n_keep], dst[perm][:n_keep]
+
+        # dense renumbering: the sort-based dual of Ringo's node hash table
+        all_ids = jnp.sort(jnp.concatenate([src, dst]))
+        if all_ids.shape[0] == 0:
+            return cls.from_dense_edges(src, dst, 0)
+        firsts = jnp.concatenate([jnp.ones((1,), bool), all_ids[1:] != all_ids[:-1]])
+        n_nodes = int(jnp.sum(firsts))
+        node_cap = next_capacity(max(n_nodes, 1))
+        uniq_pos = jnp.nonzero(firsts, size=node_cap, fill_value=all_ids.shape[0] - 1)[0]
+        node_ids = jnp.where(jnp.arange(node_cap) < n_nodes, all_ids[uniq_pos],
+                             INVALID_ID)
+        valid_ids = node_ids[:n_nodes]
+        src_d = jnp.searchsorted(valid_ids, src).astype(jnp.int32)
+        dst_d = jnp.searchsorted(valid_ids, dst).astype(jnp.int32)
+
+        if dedupe:
+            src_d, dst_d = _dedupe_pairs(src_d, dst_d, n_nodes)
+        return cls.from_dense_edges(src_d, dst_d, n_nodes, node_ids=node_ids)
+
+    # -- accessors ---------------------------------------------------------------
+    @property
+    def node_capacity(self) -> int:
+        return int(self.node_ids.shape[0])
+
+    @property
+    def edge_capacity(self) -> int:
+        return int(self.out_idx.shape[0])
+
+    def out_degrees(self) -> jax.Array:
+        return (self.out_ptr[1:] - self.out_ptr[:-1])[: self.n_nodes]
+
+    def in_degrees(self) -> jax.Array:
+        return (self.in_ptr[1:] - self.in_ptr[:-1])[: self.n_nodes]
+
+    def out_edges(self) -> Tuple[jax.Array, jax.Array]:
+        """(src, dst) with edges sorted by src (dense ids, valid prefix)."""
+        e = self.n_edges
+        src = _row_of_edge(self.out_ptr, self.edge_capacity)[:e]
+        return src, self.out_idx[:e]
+
+    def in_edges(self) -> Tuple[jax.Array, jax.Array]:
+        """(src, dst) with edges sorted by dst (dense ids, valid prefix)."""
+        e = self.n_edges
+        dst = _row_of_edge(self.in_ptr, self.edge_capacity)[:e]
+        return self.in_idx[:e], dst
+
+    def neighbors_out(self, dense_id: int) -> jax.Array:
+        lo, hi = int(self.out_ptr[dense_id]), int(self.out_ptr[dense_id + 1])
+        return self.out_idx[lo:hi]
+
+    def dense_of(self, original_ids) -> jax.Array:
+        """Vectorized id lookup (the hash-probe dual)."""
+        q = jnp.asarray(original_ids, dtype=jnp.int32)
+        return jnp.searchsorted(self.node_ids[: self.n_nodes], q).astype(jnp.int32)
+
+    def original_of(self, dense_ids) -> jax.Array:
+        return self.node_ids[jnp.asarray(dense_ids, dtype=jnp.int32)]
+
+    # -- functional updates (the dynamism story) -----------------------------------
+    def add_edges(self, src, dst, dedupe: bool = True) -> "Graph":
+        """Merge new edges (original ids) — functional rebuild via sorted merge."""
+        osrc = self.original_of(self.out_edges()[0])
+        odst = self.original_of(self.out_edges()[1])
+        src = jnp.concatenate([osrc, jnp.asarray(src, jnp.int32)])
+        dst = jnp.concatenate([odst, jnp.asarray(dst, jnp.int32)])
+        return Graph.from_edges(src, dst, dedupe=dedupe)
+
+    def delete_edges(self, src, dst) -> "Graph":
+        """Remove the given (original-id) edges; sort-based anti-join.
+
+        Host-side op (interactive path): exact 64-bit pair keys via numpy,
+        since device int64 is disabled in 32-bit mode.
+        """
+        s, d = self.out_edges()
+        os = np.asarray(self.original_of(s), dtype=np.int64)
+        od = np.asarray(self.original_of(d), dtype=np.int64)
+        keys = (os << np.int64(32)) | (od & np.int64(0xFFFFFFFF))
+        dk = (np.asarray(src, dtype=np.int64) << np.int64(32)) | \
+             (np.asarray(dst, dtype=np.int64) & np.int64(0xFFFFFFFF))
+        keep = ~np.isin(keys, dk)
+        return Graph.from_edges(os[keep].astype(np.int32),
+                                od[keep].astype(np.int32), dedupe=False)
+
+    def to_undirected(self) -> "Graph":
+        """Symmetrized simple graph (for triangles / k-core / WCC)."""
+        s, d = self.out_edges()
+        os, od = self.original_of(s), self.original_of(d)
+        src = jnp.concatenate([os, od])
+        dst = jnp.concatenate([od, os])
+        return Graph.from_edges(src, dst, dedupe=True, drop_self_loops=True)
+
+    def nbytes(self) -> int:
+        total = 0
+        for a in (self.node_ids, self.out_ptr, self.out_idx, self.in_ptr, self.in_idx):
+            total += a.size * a.dtype.itemsize
+        return int(total)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Graph({self.n_nodes} nodes, {self.n_edges} edges)"
+
+
+# ---------------------------------------------------------------------------
+# internals — the sort-first building blocks
+# ---------------------------------------------------------------------------
+
+
+def _pad_ids(ids: jax.Array, cap: int) -> jax.Array:
+    n = int(ids.shape[0])
+    if n == cap:
+        return ids.astype(jnp.int32)
+    pad = jnp.full((cap - n,), INVALID_ID, dtype=jnp.int32)
+    return jnp.concatenate([ids.astype(jnp.int32), pad])
+
+
+def _csr_from_pairs(row: jax.Array, col: jax.Array, n_nodes: int,
+                    node_cap: int, edge_cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Sort-first CSR: lexsort (row, col) -> counts -> ptr; no hash inserts."""
+    e = int(row.shape[0])
+    perm = jnp.lexsort((col, row))  # row primary, col secondary => sorted adjacency
+    col_sorted = col[perm]
+    counts = jnp.bincount(row, length=node_cap)  # "compute counts explicitly"
+    ptr = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])
+    idx = jnp.full((edge_cap,), jnp.int32(0))
+    idx = idx.at[:e].set(col_sorted.astype(jnp.int32)) if e > 0 else idx
+    return ptr.astype(jnp.int32), idx
+
+
+def _row_of_edge(ptr: jax.Array, edge_cap: int) -> jax.Array:
+    """Row id of each CSR slot: searchsorted(ptr, e, 'right')-1, vectorized."""
+    e_idx = jnp.arange(edge_cap, dtype=jnp.int32)
+    return (jnp.searchsorted(ptr, e_idx, side="right") - 1).astype(jnp.int32)
+
+
+def _dedupe_pairs(src: jax.Array, dst: jax.Array, n_nodes: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Remove duplicate (src, dst) pairs — lexsorted-unique, eager size.
+
+    Pure 32-bit: no combined key is formed, the pair is compared
+    componentwise after a lexsort (collision-free at any scale).
+    """
+    if int(src.shape[0]) == 0:
+        return src, dst
+    order_ = jnp.lexsort((dst, src))
+    ss, ds = src[order_], dst[order_]
+    firsts = jnp.concatenate(
+        [jnp.ones((1,), bool), (ss[1:] != ss[:-1]) | (ds[1:] != ds[:-1])])
+    n_uniq = int(jnp.sum(firsts))
+    pos = jnp.nonzero(firsts, size=max(n_uniq, 1), fill_value=0)[0]
+    sel = order_[pos][:n_uniq]
+    return src[sel], dst[sel]

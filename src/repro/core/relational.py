@@ -1,0 +1,447 @@
+"""Relational operations on Ringo tables (paper §2.3, Table 4).
+
+Ringo provides select, join, project, group & aggregate, set operations and
+order, plus two graph-construction ops unique to Ringo: **SimJoin** (join two
+records if their distance is below a threshold) and **NextK** (join
+predecessor-successor records, e.g. temporally ordered events).
+
+TPU adaptation: every op is a *sort + searchsorted + segmented-scan*
+composition — the contention-free, vectorizable duals of Ringo's hash-based
+OpenMP loops (see DESIGN.md §2).  Output sizes are data-dependent, so the ops
+run eagerly (like Ringo's interactive Python front end) with jitted inner
+kernels; outputs are padded to power-of-two capacities.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import FLOAT, INT, STR, Schema, Table, next_capacity
+
+__all__ = [
+    "select",
+    "select_inplace",
+    "join",
+    "order",
+    "group_by",
+    "project",
+    "union",
+    "intersect",
+    "difference",
+    "sim_join",
+    "next_k",
+    "unique",
+]
+
+# ---------------------------------------------------------------------------
+# Predicates / select
+# ---------------------------------------------------------------------------
+
+_CMPS: Dict[str, Callable[[jax.Array, jax.Array], jax.Array]] = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def _predicate_mask(t: Table, col: str, op: str, value) -> jax.Array:
+    typ = t.schema.type_of(col)
+    if typ == STR:
+        if op not in ("==", "!="):
+            raise ValueError("string columns support ==/!= only")
+        try:
+            code = t.dicts[col].index(value)
+        except ValueError:
+            code = -1  # not present: == matches nothing, != matches all
+        value = code
+    arr = t.column(col)
+    return _CMPS[op](arr, jnp.asarray(value, dtype=arr.dtype))
+
+
+def select(t: Table, col: str, op: str, value) -> Table:
+    """New table with rows where ``col <op> value`` (paper's Select)."""
+    mask = _predicate_mask(t, col, op, value)
+    return t.compacted(mask)
+
+
+def select_inplace(t: Table, col: str, op: str, value) -> Table:
+    """Paper Table 4 benchmarks "select, in place": same storage, compacted.
+
+    Functionally identical to :func:`select` under JAX's immutable arrays;
+    the distinction Ringo draws (no new table object) maps to reusing the
+    same capacity bucket, which :meth:`Table.compacted` already does.
+    """
+    return select(t, col, op, value)
+
+
+def project(t: Table, cols: Sequence[str]) -> Table:
+    schema = t.schema.project(cols)
+    columns = {c: t.columns[c] for c in cols}
+    dicts = {c: t.dicts[c] for c in cols if c in t.dicts}
+    return Table(schema=schema, columns=columns, row_ids=t.row_ids,
+                 n_valid=t.n_valid, dicts=dicts, next_row_id=t.next_row_id)
+
+
+# ---------------------------------------------------------------------------
+# Order (sort)
+# ---------------------------------------------------------------------------
+
+
+def _sort_key(t: Table, col: str) -> jax.Array:
+    """Sortable key for a column; STR codes map to lexicographic ranks."""
+    arr = t.column(col)
+    if t.schema.type_of(col) == STR:
+        uniq = t.dicts[col]
+        rank_of = np.empty(max(len(uniq), 1), dtype=np.int32)
+        for rank, idx in enumerate(sorted(range(len(uniq)),
+                                          key=lambda i: uniq[i])):
+            rank_of[idx] = rank
+        arr = jnp.asarray(rank_of)[arr] if t.n_valid > 0 else arr
+    return arr
+
+
+def order(t: Table, cols: Sequence[str], ascending: bool = True) -> Table:
+    """Sort rows lexicographically by ``cols`` (paper's Order)."""
+    keys = [_sort_key(t, c) for c in reversed(cols)]  # lexsort: last primary
+    perm = jnp.lexsort(tuple(keys))
+    if not ascending:
+        perm = perm[::-1]
+    return t.gathered(perm, t.n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Join (sort-merge, contention free)
+# ---------------------------------------------------------------------------
+
+
+def _align_str_keys(lt: Table, lcol: str, rt: Table, rcol: str) -> Tuple[jax.Array, jax.Array]:
+    """Map both STR key columns into the left dictionary's code space."""
+    ldict = lt.dicts[lcol]
+    index = {s: i for i, s in enumerate(ldict)}
+    remap = np.asarray([index.get(s, -1) for s in rt.dicts[rcol]], dtype=np.int32)
+    lk = lt.column(lcol)
+    rcodes = rt.column(rcol)
+    rk = jnp.where(rcodes >= 0, jnp.asarray(remap)[rcodes], -1)
+    return lk, rk
+
+
+def _join_keys(lt: Table, lcol: str, rt: Table, rcol: str) -> Tuple[jax.Array, jax.Array]:
+    ltyp, rtyp = lt.schema.type_of(lcol), rt.schema.type_of(rcol)
+    if (ltyp == STR) != (rtyp == STR):
+        raise TypeError("cannot join string column with non-string column")
+    if ltyp == STR:
+        return _align_str_keys(lt, lcol, rt, rcol)
+    return lt.column(lcol), rt.column(rcol)
+
+
+@jax.jit
+def _join_counts(lk: jax.Array, rk_sorted: jax.Array):
+    lo = jnp.searchsorted(rk_sorted, lk, side="left")
+    hi = jnp.searchsorted(rk_sorted, lk, side="right")
+    cnt = (hi - lo).astype(jnp.int32)
+    return lo, cnt
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _expand_matches(lo: jax.Array, cnt: jax.Array, r_perm: jax.Array, out_cap: int):
+    """Expand per-left-row match ranges into (left_idx, right_idx) pairs.
+
+    Output row j belongs to left row i = searchsorted(offsets, j, 'right')-1
+    with rank k = j - offsets[i]; its right index is r_perm[lo[i] + k].
+    """
+    offsets = jnp.cumsum(cnt)  # exclusive end per left row
+    starts = offsets - cnt
+    j = jnp.arange(out_cap, dtype=jnp.int32)
+    total = offsets[-1] if offsets.shape[0] > 0 else jnp.int32(0)
+    li = jnp.searchsorted(offsets, j, side="right").astype(jnp.int32)
+    li = jnp.minimum(li, lo.shape[0] - 1)
+    k = j - starts[li]
+    ri_sorted_pos = lo[li] + k
+    ri_sorted_pos = jnp.clip(ri_sorted_pos, 0, r_perm.shape[0] - 1)
+    ri = r_perm[ri_sorted_pos]
+    valid = j < total
+    return jnp.where(valid, li, 0), jnp.where(valid, ri, 0)
+
+
+def join(lt: Table, rt: Table, lcol: str, rcol: str,
+         suffixes: Tuple[str, str] = ("_1", "_2")) -> Table:
+    """Equi-join (paper's Join): sort-merge, parallel and contention-free.
+
+    Column names colliding between the two inputs get ``suffixes``.
+    Output row-ids are fresh (it is a new table, per the paper: "Ringo join
+    operation always produces a new table object").
+    """
+    lk, rk = _join_keys(lt, lcol, rt, rcol)
+    if lt.n_valid == 0 or rt.n_valid == 0:
+        total, out_cap = 0, next_capacity(0)
+        li = jnp.zeros((out_cap,), jnp.int32)
+        ri = jnp.zeros((out_cap,), jnp.int32)
+    else:
+        r_perm = jnp.argsort(rk, stable=True).astype(jnp.int32)
+        rk_sorted = rk[r_perm]
+        lo, cnt = _join_counts(lk, rk_sorted)
+        total = int(jnp.sum(cnt))
+        out_cap = next_capacity(total)
+        li, ri = _expand_matches(lo, cnt, r_perm, out_cap)
+
+    # assemble output columns
+    fields: List[Tuple[str, str]] = []
+    columns: Dict[str, jax.Array] = {}
+    dicts: Dict[str, List[str]] = {}
+
+    def _emit(src: Table, idx: jax.Array, suffix: str, other: Table):
+        for name, typ in src.schema.fields:
+            out_name = name + suffix if name in other.schema else name
+            fields.append((out_name, typ))
+            # match indices only ever point into the valid prefix
+            columns[out_name] = jnp.take(src.columns[name], idx, axis=0)
+            if typ == STR:
+                dicts[out_name] = list(src.dicts[name])
+
+    _emit(lt, li, suffixes[0], rt)
+    _emit(rt, ri, suffixes[1], lt)
+
+    schema = Schema(tuple(fields))
+    row_ids = jnp.where(jnp.arange(out_cap) < total,
+                        jnp.arange(out_cap, dtype=jnp.int32), -1)
+    return Table(schema=schema, columns=columns, row_ids=row_ids,
+                 n_valid=total, dicts=dicts, next_row_id=total)
+
+
+# ---------------------------------------------------------------------------
+# Group & aggregate
+# ---------------------------------------------------------------------------
+
+_AGGS = ("sum", "min", "max", "count", "mean", "first")
+
+
+def group_by(t: Table, key: str, aggs: Dict[str, Tuple[str, str]]) -> Table:
+    """Group rows by ``key``; ``aggs`` maps out_col -> (in_col, agg).
+
+    agg ∈ {sum, min, max, count, mean, first}.  Sort-based: sorting the key
+    column turns grouping into segmented scans (no concurrent hash table —
+    the TPU dual of Ringo's parallel group-by).
+    """
+    n = t.n_valid
+    k = t.column(key)
+    perm = jnp.argsort(k, stable=True)
+    ks = k[perm]
+    # segment starts where the sorted key changes
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]]) if n > 0 \
+        else jnp.zeros((0,), bool)
+    seg_id = jnp.cumsum(is_start) - 1 if n > 0 else jnp.zeros((0,), jnp.int32)
+    n_groups = int(seg_id[-1]) + 1 if n > 0 else 0
+    cap = next_capacity(max(n_groups, 1))
+
+    out_cols: Dict[str, jax.Array] = {}
+    fields: List[Tuple[str, str]] = [(key, t.schema.type_of(key))]
+    starts = jnp.nonzero(is_start, size=cap, fill_value=0)[0] if n > 0 \
+        else jnp.zeros((cap,), jnp.int32)
+    out_cols[key] = ks[starts] if n > 0 else jnp.zeros((cap,), k.dtype)
+
+    for out_name, (in_col, agg) in aggs.items():
+        if agg not in _AGGS:
+            raise ValueError(f"unknown aggregate {agg}")
+        typ = t.schema.type_of(in_col)
+        v = t.column(in_col)[perm] if n > 0 else t.column(in_col)
+        if agg == "count":
+            vals = jax.ops.segment_sum(jnp.ones_like(v, dtype=jnp.int32), seg_id,
+                                       num_segments=cap)
+            fields.append((out_name, INT))
+        elif agg == "sum":
+            vals = jax.ops.segment_sum(v, seg_id, num_segments=cap)
+            fields.append((out_name, typ))
+        elif agg == "min":
+            vals = jax.ops.segment_min(v, seg_id, num_segments=cap)
+            fields.append((out_name, typ))
+        elif agg == "max":
+            vals = jax.ops.segment_max(v, seg_id, num_segments=cap)
+            fields.append((out_name, typ))
+        elif agg == "mean":
+            s = jax.ops.segment_sum(v.astype(jnp.float32), seg_id, num_segments=cap)
+            c = jax.ops.segment_sum(jnp.ones_like(v, jnp.float32), seg_id,
+                                    num_segments=cap)
+            vals = s / jnp.maximum(c, 1.0)
+            fields.append((out_name, FLOAT))
+        elif agg == "first":
+            vals = v[starts] if n > 0 else jnp.zeros((cap,), v.dtype)
+            fields.append((out_name, typ))
+        out_cols[out_name] = vals
+
+    schema = Schema(tuple(fields))
+    row_ids = jnp.where(jnp.arange(cap) < n_groups,
+                        jnp.arange(cap, dtype=jnp.int32), -1)
+    dicts = {key: list(t.dicts[key])} if key in t.dicts else {}
+    return Table(schema=schema, columns=out_cols, row_ids=row_ids,
+                 n_valid=n_groups, dicts=dicts, next_row_id=n_groups)
+
+
+def unique(t: Table, col: str) -> Table:
+    """Distinct values of one column (sorted)."""
+    return group_by(t, col, {})
+
+
+# ---------------------------------------------------------------------------
+# Set operations (on a key column)
+# ---------------------------------------------------------------------------
+
+
+def _set_op(lt: Table, rt: Table, col: str, mode: str) -> Table:
+    lk, rk = _join_keys(lt, col, rt, col)
+    rk_sorted = jnp.sort(rk)
+    lo = jnp.searchsorted(rk_sorted, lk, side="left")
+    hi = jnp.searchsorted(rk_sorted, lk, side="right")
+    in_right = hi > lo
+    if mode == "intersect":
+        return lt.compacted(in_right)
+    if mode == "difference":
+        return lt.compacted(~in_right)
+    raise ValueError(mode)
+
+
+def intersect(lt: Table, rt: Table, col: str) -> Table:
+    """Rows of ``lt`` whose key appears in ``rt`` (semi-join)."""
+    return _set_op(lt, rt, col, "intersect")
+
+
+def difference(lt: Table, rt: Table, col: str) -> Table:
+    """Rows of ``lt`` whose key does NOT appear in ``rt`` (anti-join)."""
+    return _set_op(lt, rt, col, "difference")
+
+
+def union(lt: Table, rt: Table) -> Table:
+    """Row union (concatenate; schemas must match by name/type)."""
+    if lt.schema.names != rt.schema.names:
+        raise ValueError("union requires identical schemas")
+    n = lt.n_valid + rt.n_valid
+    cap = next_capacity(n)
+    cols: Dict[str, jax.Array] = {}
+    dicts: Dict[str, List[str]] = {}
+    for name, typ in lt.schema.fields:
+        lv = lt.column(name)
+        rv = rt.column(name)
+        if typ == STR:
+            # re-encode right codes into (extended) left dictionary
+            merged = list(lt.dicts[name])
+            index = {s: i for i, s in enumerate(merged)}
+            remap = []
+            for s in rt.dicts[name]:
+                if s not in index:
+                    index[s] = len(merged)
+                    merged.append(s)
+                remap.append(index[s])
+            remap_a = jnp.asarray(np.asarray(remap, dtype=np.int32)) \
+                if remap else jnp.zeros((1,), jnp.int32)
+            rv = remap_a[rv] if rt.n_valid > 0 else rv
+            dicts[name] = merged
+        both = jnp.concatenate([lv, rv])
+        pad = jnp.zeros((cap - n,), both.dtype)
+        cols[name] = jnp.concatenate([both, pad])
+    row_ids = jnp.where(jnp.arange(cap) < n, jnp.arange(cap, dtype=jnp.int32), -1)
+    return Table(schema=lt.schema, columns=cols, row_ids=row_ids, n_valid=n,
+                 dicts=dicts, next_row_id=n)
+
+
+# ---------------------------------------------------------------------------
+# SimJoin — join records whose distance is below a threshold (paper §2.3)
+# ---------------------------------------------------------------------------
+
+
+def sim_join(lt: Table, rt: Table, lcol: str, rcol: str, threshold: float,
+             suffixes: Tuple[str, str] = ("_1", "_2")) -> Table:
+    """Join rows with |l - r| <= threshold on numeric columns.
+
+    Sort-based band join: sort the right column; each left value matches the
+    contiguous sorted range [value-thr, value+thr] found by two searchsorteds.
+    Same expansion machinery as the equi-join, so it parallelizes identically.
+    """
+    lk = lt.column(lcol).astype(jnp.float32)
+    rk = rt.column(rcol).astype(jnp.float32)
+    r_perm = jnp.argsort(rk, stable=True).astype(jnp.int32)
+    rk_sorted = rk[r_perm]
+    lo = jnp.searchsorted(rk_sorted, lk - threshold, side="left")
+    hi = jnp.searchsorted(rk_sorted, lk + threshold, side="right")
+    cnt = (hi - lo).astype(jnp.int32)
+    total = int(jnp.sum(cnt))
+    out_cap = next_capacity(total)
+    li, ri = _expand_matches(lo.astype(jnp.int32), cnt, r_perm, out_cap)
+    return _assemble_pair_table(lt, rt, li, ri, total, out_cap, suffixes)
+
+
+# ---------------------------------------------------------------------------
+# NextK — predecessor/successor join (paper §2.3)
+# ---------------------------------------------------------------------------
+
+
+def next_k(t: Table, key: str, time_col: str, k: int,
+           suffixes: Tuple[str, str] = ("_1", "_2")) -> Table:
+    """Join each record with its next ``k`` successors within the same key.
+
+    E.g. consecutive events of the same user: edges (event_i -> event_{i+j})
+    for j in 1..k.  Sort by (key, time); successor ranks are then index
+    arithmetic — the sort-first trick again.
+    """
+    n = t.n_valid
+    sorted_t = order(t, [key, time_col])
+    kcol = sorted_t.column(key)
+    base = jnp.arange(n, dtype=jnp.int32)
+    lis, ris = [], []
+    for j in range(1, k + 1):
+        succ = base + j
+        ok = succ < n
+        same = jnp.where(ok, kcol[jnp.minimum(succ, n - 1)] == kcol, False)
+        lis.append(jnp.where(same, base, -1))
+        ris.append(jnp.where(same, succ, -1))
+    li_all = jnp.concatenate(lis) if lis else jnp.zeros((1,), jnp.int32)
+    ri_all = jnp.concatenate(ris) if ris else jnp.zeros((1,), jnp.int32)
+    mask = li_all >= 0
+    total = int(jnp.sum(mask))
+    out_cap = next_capacity(total)
+    # compact valid pairs to the front; pad the permutation out to capacity
+    perm = jnp.argsort(~mask, stable=True)
+    take = min(out_cap, int(perm.shape[0]))
+    perm = jnp.concatenate([perm[:take],
+                            jnp.zeros((out_cap - take,), perm.dtype)])
+    valid = jnp.arange(out_cap) < total
+    li = jnp.where(valid, jnp.maximum(li_all[perm], 0), 0)
+    ri = jnp.where(valid, jnp.maximum(ri_all[perm], 0), 0)
+    return _assemble_pair_table(sorted_t, sorted_t, li, ri, total, out_cap, suffixes)
+
+
+# ---------------------------------------------------------------------------
+# shared output assembly
+# ---------------------------------------------------------------------------
+
+
+def _assemble_pair_table(lt: Table, rt: Table, li: jax.Array, ri: jax.Array,
+                         total: int, out_cap: int,
+                         suffixes: Tuple[str, str]) -> Table:
+    fields: List[Tuple[str, str]] = []
+    columns: Dict[str, jax.Array] = {}
+    dicts: Dict[str, List[str]] = {}
+
+    def _emit(src: Table, idx: jax.Array, suffix: str, other: Table, always_suffix: bool):
+        for name, typ in src.schema.fields:
+            clash = name in other.schema
+            out_name = name + suffix if (clash or always_suffix) else name
+            fields.append((out_name, typ))
+            columns[out_name] = jnp.take(src.columns[name], idx, axis=0)
+            if typ == STR:
+                dicts[out_name] = list(src.dicts[name])
+
+    same = lt is rt
+    _emit(lt, li, suffixes[0], rt, always_suffix=same)
+    _emit(rt, ri, suffixes[1], lt, always_suffix=same)
+    schema = Schema(tuple(fields))
+    row_ids = jnp.where(jnp.arange(out_cap) < total,
+                        jnp.arange(out_cap, dtype=jnp.int32), -1)
+    return Table(schema=schema, columns=columns, row_ids=row_ids,
+                 n_valid=total, dicts=dicts, next_row_id=total)

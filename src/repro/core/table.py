@@ -1,0 +1,352 @@
+"""Columnar in-memory tables (Ringo §2.3) in JAX.
+
+Ringo implements native relational tables as a *column-based store* with a
+schema (int / float / string columns) and a **persistent unique row id** per
+row, which enables fast in-place grouping/filtering/selection and fine-grained
+data tracking through complex pipelines.
+
+TPU/JAX adaptation
+------------------
+XLA wants static shapes, but an interactive system produces data-dependent
+sizes (a select's output size is known only after it runs).  We therefore give
+every table a *capacity* (padded, bucketed to powers of two so recompiles are
+logarithmic in growth) and an explicit ``n_valid``.  Rows beyond ``n_valid``
+are padding.  "Select in place" (paper Table 4) compacts valid rows to the
+front of the same capacity bucket — the static-shape dual of Ringo's
+persistent-row-id filtering.
+
+Strings are dictionary-encoded: a column holds int32 codes plus a host-side
+list of unique strings (Ringo's C++ backend does the same via string pools).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Schema",
+    "Table",
+    "ColumnType",
+    "next_capacity",
+    "INT",
+    "FLOAT",
+    "STR",
+]
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+INT = "int"
+FLOAT = "float"
+STR = "str"
+
+_DTYPE_FOR = {INT: jnp.int64, FLOAT: jnp.float32, STR: jnp.int32}
+# We run with x64 disabled by default; int columns are int32 on-device.
+_DTYPE_FOR_32 = {INT: jnp.int32, FLOAT: jnp.float32, STR: jnp.int32}
+
+ColumnType = str
+
+
+@dataclass(frozen=True)
+class Schema:
+    """Ordered mapping of column name -> type (int | float | str)."""
+
+    fields: Tuple[Tuple[str, ColumnType], ...]
+
+    def __post_init__(self):
+        names = [n for n, _ in self.fields]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate column names in schema: {names}")
+        for _, t in self.fields:
+            if t not in (INT, FLOAT, STR):
+                raise ValueError(f"unknown column type {t!r}")
+
+    @classmethod
+    def of(cls, spec: Mapping[str, ColumnType] | Sequence[Tuple[str, ColumnType]]) -> "Schema":
+        if isinstance(spec, Mapping):
+            return cls(tuple(spec.items()))
+        return cls(tuple(spec))
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.fields)
+
+    def type_of(self, name: str) -> ColumnType:
+        for n, t in self.fields:
+            if n == name:
+                return t
+        raise KeyError(f"no column {name!r}; have {self.names}")
+
+    def __contains__(self, name: str) -> bool:
+        return any(n == name for n, _ in self.fields)
+
+    def with_column(self, name: str, typ: ColumnType) -> "Schema":
+        if name in self:
+            raise ValueError(f"column {name!r} already exists")
+        return Schema(self.fields + ((name, typ),))
+
+    def project(self, names: Sequence[str]) -> "Schema":
+        return Schema(tuple((n, self.type_of(n)) for n in names))
+
+
+def next_capacity(n: int, minimum: int = 8) -> int:
+    """Bucket a length to the next power of two (recompile control)."""
+    cap = max(int(minimum), 1)
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+# ---------------------------------------------------------------------------
+# Table
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Table:
+    """Columnar table with padded capacity and persistent row ids.
+
+    Attributes
+    ----------
+    schema:   column names and types (static / aux data).
+    columns:  dict name -> jnp array of shape (capacity,).
+    row_ids:  (capacity,) int32 persistent unique row identifiers.
+    n_valid:  number of valid rows (python int — host-side, like Ringo's
+              table length; ops that change it run eagerly).
+    dicts:    for STR columns, name -> list of unique strings (host side).
+    next_row_id: next fresh row id (host side).
+    """
+
+    schema: Schema
+    columns: Dict[str, jax.Array]
+    row_ids: jax.Array
+    n_valid: int
+    dicts: Dict[str, List[str]] = field(default_factory=dict)
+    next_row_id: int = 0
+
+    # -- pytree protocol (leaves: columns + row_ids) ------------------------
+    def tree_flatten(self):
+        names = self.schema.names
+        leaves = tuple(self.columns[n] for n in names) + (self.row_ids,)
+        aux = (self.schema, self.n_valid, tuple(sorted(self.dicts.items())), self.next_row_id)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        schema, n_valid, dict_items, next_row_id = aux
+        names = schema.names
+        columns = {n: leaves[i] for i, n in enumerate(names)}
+        return cls(
+            schema=schema,
+            columns=columns,
+            row_ids=leaves[len(names)],
+            n_valid=n_valid,
+            dicts={k: list(v) for k, v in dict_items},
+            next_row_id=next_row_id,
+        )
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_columns(
+        cls,
+        schema: Schema | Mapping[str, ColumnType],
+        data: Mapping[str, Any],
+        capacity: Optional[int] = None,
+    ) -> "Table":
+        if not isinstance(schema, Schema):
+            schema = Schema.of(schema)
+        names = schema.names
+        if set(data.keys()) != set(names):
+            raise ValueError(f"data columns {sorted(data)} != schema columns {sorted(names)}")
+
+        n = None
+        dicts: Dict[str, List[str]] = {}
+        cols: Dict[str, jax.Array] = {}
+        for name in names:
+            typ = schema.type_of(name)
+            raw = data[name]
+            if typ == STR:
+                codes, uniq = _encode_strings(raw)
+                dicts[name] = uniq
+                arr = jnp.asarray(codes, dtype=jnp.int32)
+            else:
+                arr = jnp.asarray(np.asarray(raw), dtype=_DTYPE_FOR_32[typ])
+            if n is None:
+                n = int(arr.shape[0])
+            elif int(arr.shape[0]) != n:
+                raise ValueError("ragged columns")
+            cols[name] = arr
+        n = n or 0
+        cap = next_capacity(n) if capacity is None else capacity
+        if cap < n:
+            raise ValueError(f"capacity {cap} < n rows {n}")
+        for name in names:
+            cols[name] = _pad_to(cols[name], cap)
+        row_ids = _pad_to(jnp.arange(n, dtype=jnp.int32), cap, fill=-1)
+        return cls(schema=schema, columns=cols, row_ids=row_ids, n_valid=n,
+                   dicts=dicts, next_row_id=n)
+
+    @classmethod
+    def empty(cls, schema: Schema | Mapping[str, ColumnType], capacity: int = 8) -> "Table":
+        if not isinstance(schema, Schema):
+            schema = Schema.of(schema)
+        data = {n: np.zeros((0,), dtype=np.float32 if schema.type_of(n) == FLOAT else np.int32)
+                if schema.type_of(n) != STR else []
+                for n in schema.names}
+        return cls.from_columns(schema, data, capacity=capacity)
+
+    # -- basic accessors ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.row_ids.shape[0])
+
+    def __len__(self) -> int:
+        return self.n_valid
+
+    def column(self, name: str) -> jax.Array:
+        """Valid prefix of a column (device array, length n_valid)."""
+        return self.columns[name][: self.n_valid]
+
+    def column_np(self, name: str) -> np.ndarray:
+        return np.asarray(self.column(name))
+
+    def strings(self, name: str) -> List[str]:
+        """Decode a STR column back to python strings (host side)."""
+        if self.schema.type_of(name) != STR:
+            raise TypeError(f"{name} is not a string column")
+        codes = self.column_np(name)
+        uniq = self.dicts[name]
+        return [uniq[c] for c in codes]
+
+    def to_pydict(self) -> Dict[str, list]:
+        out: Dict[str, list] = {}
+        for name in self.schema.names:
+            if self.schema.type_of(name) == STR:
+                out[name] = self.strings(name)
+            else:
+                out[name] = self.column_np(name).tolist()
+        return out
+
+    # -- structural ops -------------------------------------------------------
+    def with_valid(self, columns: Dict[str, jax.Array], row_ids: jax.Array,
+                   n_valid: int) -> "Table":
+        """Rebuild with same schema/dicts but new storage (bucketed)."""
+        return Table(schema=self.schema, columns=columns, row_ids=row_ids,
+                     n_valid=n_valid, dicts=dict(self.dicts), next_row_id=self.next_row_id)
+
+    def compacted(self, keep_mask: jax.Array) -> "Table":
+        """Keep rows where mask (length n_valid) is True; compact to front.
+
+        This is Ringo's "select in place": same object shape, fewer valid rows.
+        """
+        mask = keep_mask[: self.n_valid]
+        n_keep = int(jnp.sum(mask))
+        cap = self.capacity
+        # stable compaction permutation: valid keeps first, in order
+        perm = _compact_perm(mask, cap)
+        cols = {n: jnp.take(self.columns[n], perm, axis=0) for n in self.schema.names}
+        rid = jnp.take(self.row_ids, perm, axis=0)
+        return self.with_valid(cols, rid, n_keep)
+
+    def gathered(self, idx: jax.Array, n_valid: int,
+                 fresh_row_ids: bool = False) -> "Table":
+        """New table whose rows are self[idx] (idx may exceed n_valid into pad)."""
+        cap = next_capacity(int(idx.shape[0]))
+        idx = _pad_to(idx.astype(jnp.int32), cap)
+        cols = {n: jnp.take(self.columns[n], idx, axis=0) for n in self.schema.names}
+        if fresh_row_ids:
+            rid = _pad_to(jnp.arange(n_valid, dtype=jnp.int32), cap, fill=-1)
+            t = self.with_valid(cols, rid, n_valid)
+            t.next_row_id = n_valid
+            return t
+        rid = jnp.take(self.row_ids, idx, axis=0)
+        return self.with_valid(cols, rid, n_valid)
+
+    def with_column_added(self, name: str, typ: ColumnType, values: Any,
+                          strings: Optional[List[str]] = None) -> "Table":
+        """Add a column (length n_valid or capacity); pads to capacity."""
+        arr = jnp.asarray(values)
+        if typ == STR:
+            if strings is None:
+                codes, strings = _encode_strings(values)
+                arr = jnp.asarray(codes, dtype=jnp.int32)
+            else:
+                arr = arr.astype(jnp.int32)
+        else:
+            arr = arr.astype(_DTYPE_FOR_32[typ])
+        if int(arr.shape[0]) == self.n_valid:
+            arr = _pad_to(arr, self.capacity)
+        elif int(arr.shape[0]) != self.capacity:
+            raise ValueError("column length must be n_valid or capacity")
+        new_schema = self.schema.with_column(name, typ)
+        cols = dict(self.columns)
+        cols[name] = arr
+        dicts = dict(self.dicts)
+        if typ == STR:
+            dicts[name] = list(strings or [])
+        return Table(schema=new_schema, columns=cols, row_ids=self.row_ids,
+                     n_valid=self.n_valid, dicts=dicts, next_row_id=self.next_row_id)
+
+    def renamed(self, mapping: Mapping[str, str]) -> "Table":
+        fields = tuple((mapping.get(n, n), t) for n, t in self.schema.fields)
+        cols = {mapping.get(n, n): a for n, a in self.columns.items()}
+        dicts = {mapping.get(n, n): v for n, v in self.dicts.items()}
+        return Table(schema=Schema(fields), columns=cols, row_ids=self.row_ids,
+                     n_valid=self.n_valid, dicts=dicts, next_row_id=self.next_row_id)
+
+    def nbytes(self) -> int:
+        """In-memory size (paper Table 2 analogue)."""
+        total = self.row_ids.size * self.row_ids.dtype.itemsize
+        for a in self.columns.values():
+            total += a.size * a.dtype.itemsize
+        return int(total)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"Table({self.n_valid} rows / cap {self.capacity}, "
+                f"cols={list(self.schema.names)})")
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(a: jax.Array, cap: int, fill: int | float = 0) -> jax.Array:
+    n = int(a.shape[0])
+    if n == cap:
+        return a
+    if n > cap:
+        raise ValueError(f"array of {n} rows > capacity {cap}")
+    pad = jnp.full((cap - n,) + a.shape[1:], fill, dtype=a.dtype)
+    return jnp.concatenate([a, pad], axis=0)
+
+
+def _encode_strings(raw: Iterable[str]) -> Tuple[np.ndarray, List[str]]:
+    """Dictionary-encode strings -> (codes, uniques). Stable first-seen order."""
+    uniq: Dict[str, int] = {}
+    codes = []
+    for s in raw:
+        code = uniq.setdefault(s, len(uniq))
+        codes.append(code)
+    return np.asarray(codes, dtype=np.int32), list(uniq.keys())
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _compact_perm(mask: jax.Array, cap: int) -> jax.Array:
+    """Permutation putting True rows (in order) first, padded with cap-1 dups.
+
+    mask has length n_valid <= cap; result has length cap.
+    """
+    n = mask.shape[0]
+    full = jnp.zeros((cap,), dtype=bool).at[:n].set(mask)
+    # stable argsort of (not mask): True rows keep order at the front
+    order = jnp.argsort(~full, stable=True)
+    return order.astype(jnp.int32)

@@ -1,0 +1,54 @@
+"""Graph-derived training corpora — the bridge between the paper's engine
+and the LM substrate (DESIGN.md §4).
+
+Ringo's workflow ends with "results back to tables"; here a table/graph
+round-trips into an LM token stream: random walks over a Graph become
+sequences (DeepWalk-style), so the LM examples train on data produced by the
+graph engine itself.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph
+
+__all__ = ["RandomWalkCorpus"]
+
+
+class RandomWalkCorpus:
+    """Batches of random-walk token sequences over a graph.
+
+    Node ids are tokens (vocab = n_nodes, callers cap/remap as needed).
+    Deterministic per (seed, step) like SyntheticLM.
+    """
+
+    def __init__(self, g: Graph, batch: int, seq_len: int, seed: int = 0):
+        self.batch = batch
+        self.seq = seq_len
+        self.seed = seed
+        self.n = g.n_nodes
+        # host-side CSR copies for fast walking
+        self.ptr = np.asarray(g.out_ptr)
+        self.idx = np.asarray(g.out_idx)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        walks = np.zeros((self.batch, self.seq + 1), np.int32)
+        cur = rng.integers(0, self.n, self.batch)
+        walks[:, 0] = cur
+        for t in range(1, self.seq + 1):
+            lo = self.ptr[cur]
+            hi = self.ptr[cur + 1]
+            deg = hi - lo
+            # dangling nodes teleport
+            jump = rng.integers(0, self.n, self.batch)
+            offs = (rng.random(self.batch) * np.maximum(deg, 1)).astype(np.int64)
+            nxt = np.where(deg > 0, self.idx[lo + offs], jump)
+            cur = nxt.astype(np.int64)
+            walks[:, t] = cur
+        return {"tokens": walks[:, :-1], "targets": walks[:, 1:]}

@@ -1,0 +1,127 @@
+"""Flash-attention forward Pallas TPU kernel — the §Perf follow-up.
+
+The pure-XLA chunked attention (models/attention.py) materializes f32
+(q_chunk × k_chunk) score tiles in HBM between fusions; §Roofline shows
+they dominate the memory term of every attention arch.  This kernel keeps
+the running (acc, m, l) state AND the score tile in VMEM for the entire
+query block — HBM traffic collapses to the q/k/v/o streams:
+
+    arithmetic intensity:  ~14 flops/B (XLA chunks)  →  ~2·q_chunk/6 ≈ 170
+    (past the v5e ridge of 240 only for q_chunk ≥ 720; at the default 512
+    it still cuts the attention memory term ~12×).
+
+Grid: (batch·heads, n_q_blocks, n_k_blocks), k innermost (sequential on
+TPU) so the VMEM scratch carries across k steps.  Causality is enforced
+per-tile with an index mask; fully-masked tiles are skipped via
+``@pl.when`` (no MXU issue, though the blocks still occupy grid steps —
+the XLA-level triangle skip in models/attention.py removes them from the
+grid entirely, which is why both exist).
+
+Forward only: training uses the XLA path (autodiff through a Pallas call
+needs a custom VJP kernel — documented follow-up); serving (prefill) is
+where the memory term hurts most anyway.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, q_chunk: int, k_chunk: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or True  # tile-level skip below
+
+    @pl.when((not causal) or (ki * k_chunk <= qi * q_chunk + q_chunk - 1))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (qc, D)
+        k = k_ref[0].astype(jnp.float32)                  # (kc, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * q_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, k_chunk), 0)
+            kpos = ki * k_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, k_chunk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_chunk", "k_chunk",
+                                             "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, q_chunk: int = 512,
+                        k_chunk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q,k,v: (B, S, H, D) with equal head counts (repeat GQA first).
+
+    Returns (B, S, H, D); accumulation in f32, output in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    while sq % q_chunk:
+        q_chunk //= 2
+    while sk % k_chunk:
+        k_chunk //= 2
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = 1.0 / (d ** 0.5)
+
+    # (B, S, H, D) -> (B*H, S, D) streams
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+
+    kernel = functools.partial(_flash_kernel, causal=causal,
+                               q_chunk=q_chunk, k_chunk=k_chunk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, k_chunk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, k_chunk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, d), jnp.float32),
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,188 @@
+"""Public jit'd wrappers around the Pallas kernels + host-side re-blocking.
+
+These give graph-level entry points (``pagerank_bsr``, ``triangle_count_bsr``,
+``segment_sum_sorted``) used by benchmarks and the distributed engine.  The
+host-side helpers perform the *re-blocking* that adapts Ringo's per-edge
+algorithms to MXU tiles: edges → 128×128 BSR tiles / 128-wide chunked
+segments.  On non-TPU backends the kernels run in interpret mode
+(``interpret=None`` → auto).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph
+from .bsr_spmv import bsr_spmv
+from .bsr_tricount import bsr_tricount
+from .segment_sum import DEFAULT_BLOCK, DEFAULT_CHUNK, segment_sum_chunked
+
+__all__ = [
+    "auto_interpret",
+    "edges_to_bsr",
+    "build_block_triples",
+    "pagerank_bsr",
+    "triangle_count_bsr",
+    "segment_sum_sorted",
+]
+
+
+def auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# host-side re-blocking (numpy; conversion-time work, done once per graph)
+# ---------------------------------------------------------------------------
+
+
+def edges_to_bsr(src: np.ndarray, dst: np.ndarray, n: int,
+                 values: Optional[np.ndarray] = None,
+                 block: int = DEFAULT_BLOCK
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """Build (tiles, rows, cols, n_blocks) BSR with every row-block present.
+
+    Matrix semantics: M[dst, src] = value  (the PageRank pull layout:
+    y = M @ x gathers from sources into destinations).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    vals = np.ones_like(src, dtype=np.float32) if values is None \
+        else np.asarray(values, dtype=np.float32)
+    nb = (n + block - 1) // block
+    rb, cb = dst // block, src // block
+    key = rb * nb + cb
+    uniq, inv = np.unique(key, return_inverse=True)
+    # ensure every row block appears (zero tile on the diagonal)
+    present = np.unique(uniq // nb)
+    missing = np.setdiff1d(np.arange(nb), present)
+    n_tiles = len(uniq) + len(missing)
+    tiles = np.zeros((max(n_tiles, 1), block, block), np.float32)
+    ri = (dst % block).astype(np.int64)
+    ci = (src % block).astype(np.int64)
+    np.add.at(tiles, (inv, ri, ci), vals)
+    rows = np.concatenate([uniq // nb, missing])
+    cols = np.concatenate([uniq % nb, missing])
+    order = np.argsort(rows, kind="stable")
+    tiles = tiles[order] if n_tiles else tiles
+    rows, cols = rows[order], cols[order]
+    return (jnp.asarray(tiles), jnp.asarray(rows.astype(np.int32)),
+            jnp.asarray(cols.astype(np.int32)), nb)
+
+
+def build_block_triples(rows: np.ndarray, cols: np.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Enumerate tile triples (I,J),(I,K),(K,J) all nonzero.
+
+    Block-level analogue of "for each edge, intersect the two endpoint
+    neighborhoods": the (I,J) tile plays the edge, K sweeps the common
+    block-neighborhood.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    nnzb = len(rows)
+    tile_of = {(int(r), int(c)): t for t, (r, c) in enumerate(zip(rows, cols))}
+    by_row: dict = {}
+    for t, r in enumerate(rows):
+        by_row.setdefault(int(r), []).append(t)
+    t_ij, t_ik, t_kj = [], [], []
+    for ij in range(nnzb):
+        i, j = int(rows[ij]), int(cols[ij])
+        for ik in by_row.get(i, ()):        # tiles (i, k)
+            k = int(cols[ik])
+            kj = tile_of.get((k, j))
+            if kj is not None:
+                t_ij.append(ij)
+                t_ik.append(ik)
+                t_kj.append(kj)
+    if not t_ij:  # keep grid non-empty
+        t_ij, t_ik, t_kj = [0], [0], [0]
+    return (jnp.asarray(t_ij, jnp.int32), jnp.asarray(t_ik, jnp.int32),
+            jnp.asarray(t_kj, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# graph-level entry points
+# ---------------------------------------------------------------------------
+
+
+def pagerank_bsr(g: Graph, n_iter: int = 10, damping: float = 0.85,
+                 interpret: Optional[bool] = None,
+                 block: int = DEFAULT_BLOCK) -> jax.Array:
+    """PageRank with the BSR SpMV Pallas kernel as the inner contraction."""
+    interpret = auto_interpret(interpret)
+    n = g.n_nodes
+    src, dst = g.in_edges()
+    out_deg = np.asarray(g.out_degrees(), dtype=np.float32)
+    src_np = np.asarray(src)
+    w = 1.0 / out_deg[src_np]                       # column-stochastic M
+    tiles, rows, cols, nb = edges_to_bsr(src_np, np.asarray(dst), n,
+                                         values=w, block=block)
+    dangling = jnp.asarray(out_deg == 0)
+    pr = jnp.full((nb * block,), 0.0).at[:n].set(1.0 / n)
+    for _ in range(n_iter):
+        x_blocks = pr.reshape(nb, block)
+        y = bsr_spmv(tiles, rows, cols, x_blocks, nb, interpret=interpret)
+        y = y.reshape(-1)[: n]
+        dang = jnp.sum(jnp.where(dangling, pr[:n], 0.0))
+        new = (1.0 - damping) / n + damping * (y + dang / n)
+        pr = pr.at[:n].set(new)
+    return pr[:n]
+
+
+def triangle_count_bsr(g: Graph, interpret: Optional[bool] = None,
+                       block: int = DEFAULT_BLOCK) -> int:
+    """Triangle count via the A∘(A·A) MXU kernel (g must be undirected)."""
+    interpret = auto_interpret(interpret)
+    src, dst = g.out_edges()
+    tiles, rows, cols, nb = edges_to_bsr(np.asarray(dst), np.asarray(src),
+                                         g.n_nodes, block=block)
+    tiles = jnp.minimum(tiles, 1.0)                 # simple graph: 0/1
+    t_ij, t_ik, t_kj = build_block_triples(np.asarray(rows), np.asarray(cols))
+    six_t = bsr_tricount(tiles, t_ij, t_ik, t_kj, interpret=interpret)
+    return int(round(float(six_t) / 6.0))
+
+
+def segment_sum_sorted(vals: jax.Array, seg_ids: jax.Array, n_segments: int,
+                       chunk: int = DEFAULT_CHUNK,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Segment-sum of values whose ``seg_ids`` are sorted ascending.
+
+    Host-side chunking: group by 128-wide id block (already contiguous),
+    pad each group to a multiple of ``chunk``, then run the one-hot-matmul
+    kernel.  Returns (n_segments,) f32.
+    """
+    interpret = auto_interpret(interpret)
+    b = DEFAULT_BLOCK
+    nb = (n_segments + b - 1) // b
+    seg_np = np.asarray(seg_ids, dtype=np.int64)
+    val_np = np.asarray(vals, dtype=np.float32)
+    blocks = seg_np // b
+    # group boundaries per 128-block (sorted input => contiguous)
+    starts = np.searchsorted(blocks, np.arange(nb), side="left")
+    ends = np.searchsorted(blocks, np.arange(nb), side="right")
+    counts = ends - starts
+    n_chunks = np.maximum((counts + chunk - 1) // chunk, 1)  # >=1 per block
+    total_chunks = int(n_chunks.sum())
+    cvals = np.zeros((total_chunks, chunk), np.float32)
+    clids = np.full((total_chunks, chunk), b, np.int32)      # pad id = b
+    cblk = np.zeros((total_chunks,), np.int32)
+    ci = 0
+    for blk in range(nb):
+        lo, hi = int(starts[blk]), int(ends[blk])
+        for off in range(0, max(hi - lo, 1), chunk):
+            take = min(chunk, max(hi - lo - off, 0))
+            if take > 0:
+                cvals[ci, :take] = val_np[lo + off: lo + off + take]
+                clids[ci, :take] = (seg_np[lo + off: lo + off + take] % b)
+            cblk[ci] = blk
+            ci += 1
+    out = segment_sum_chunked(jnp.asarray(cvals), jnp.asarray(clids),
+                              jnp.asarray(cblk), nb, interpret=interpret)
+    return out.reshape(-1)[: n_segments]

@@ -1,0 +1,34 @@
+"""Production mesh construction (assignment spec).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; callers (dryrun.py) set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import when they need placeholder devices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "DATA_AXES"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod mesh, or 2×16×16 across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Small mesh over the actually-present devices (tests/examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def DATA_AXES(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

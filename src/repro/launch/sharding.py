@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM stack.
+
+Model code annotates activations with *logical* axes ("batch", "heads", …);
+the launcher installs a rule set mapping logical → mesh axes for the current
+mesh.  Parameters get PartitionSpecs by path-pattern rules over the pytree.
+
+Default production mapping (DESIGN.md §5):
+  batch    -> ("pod", "data")     data parallel over pods × data axis
+  heads/ff/vocab/experts -> "model"  tensor/expert parallel
+  kv_seq   -> "data" for the 500k sequence-sharded decode path (batch=1
+              frees the data axis; flash-decode combines partial softmaxes)
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LogicalRules", "default_rules", "rules_ctx", "shard", "logical_to_spec",
+    "param_specs", "current_rules",
+]
+
+_state = threading.local()
+
+
+class LogicalRules:
+    def __init__(self, mapping: Dict[str, Any], mesh: Optional[Mesh] = None):
+        self.mapping = dict(mapping)
+        self.mesh = mesh
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        axes = []
+        for ax in logical:
+            m = self.mapping.get(ax) if ax is not None else None
+            axes.append(m)
+        return P(*axes)
+
+
+def default_rules(mesh: Optional[Mesh] = None, *, multi_pod: bool = False,
+                  kv_seq_axis=None,
+                  expert_axis_parallel: bool = True,
+                  two_d_weights: bool = False) -> LogicalRules:
+    """Logical -> mesh axis mapping.
+
+    two_d_weights: additionally shard every weight's d_model dim over the
+    data axis (FSDP/ZeRO-3 semantics under GSPMD) — required for the ≥300B
+    archs whose TP-sharded weights alone exceed per-chip HBM (DESIGN.md §5).
+    expert_axis_parallel: EP over "model" when n_experts divides; otherwise
+    experts replicate and the expert FFN dim takes the TP axis (grok: 8
+    experts < 16-way model axis).
+    kv_seq_axis: shard the decode KV cache on its sequence dim — "model"
+    for decode_32k (kv heads < model degree), ("data","model") for the
+    batch=1 500k cells (flash-decode combine happens via GSPMD collectives).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    mapping: Dict[str, Any] = {
+        "batch": dp,
+        "seq": None,
+        "embed": None,                      # activations: never sharded on d
+        "w_embed": "data" if two_d_weights else None,   # weights' d_model dim
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        # EP: experts take the model axis (w_embed covers data when 2D);
+        # otherwise the per-expert FFN dim takes the TP axis
+        "experts": "model" if expert_axis_parallel else None,
+        "expert_ff": None if expert_axis_parallel else "model",
+        "kv_seq": kv_seq_axis,
+        "ssm_inner": "model",
+        "state": None,
+        "layers": None,
+        "frames": None,
+    }
+    return LogicalRules(mapping, mesh)
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def rules_ctx(rules: LogicalRules):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_to_spec(logical: Sequence[Optional[str]]) -> Optional[P]:
+    r = current_rules()
+    if r is None:
+        return None
+    return r.spec(logical)
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain activation sharding to the logical axes (no-op w/o rules)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.spec(logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by path pattern
+# ---------------------------------------------------------------------------
+
+# Patterns are matched (re.search) against '/'-joined tree paths.  First hit
+# wins; trailing dims map right-aligned so stacked (L, ...) leaves work
+# unchanged.  These names must track the init_* functions in models/.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / unembedding
+    (r"embed/tok/table", ("vocab", "w_embed")),
+    (r"embed/pos/table", (None, "w_embed")),
+    (r"lm_head/table", ("vocab", "w_embed")),
+    # attention
+    (r".*attn/wq/w", ("w_embed", "heads")),
+    (r".*attn/wk/w", ("w_embed", "kv_heads")),
+    (r".*attn/wv/w", ("w_embed", "kv_heads")),
+    (r".*attn/wo/w", ("heads", "w_embed")),
+    (r".*attn/w[qkv]/b", ("heads",)),
+    (r".*attn/wo/b", ("w_embed",)),
+    # dense mlp
+    (r"mlp/w[ig]/w", ("w_embed", "ff")),
+    (r"mlp/wo/w", ("ff", "w_embed")),
+    (r"mlp/w[igo]/b", (None,)),
+    # MoE
+    (r"moe/router/w", ("w_embed", None)),
+    (r"moe/w[ig]$", ("experts", "w_embed", "expert_ff")),
+    (r"moe/wo$", ("experts", "expert_ff", "w_embed")),
+    # mamba
+    (r"mamba/in_proj/w", ("w_embed", "ssm_inner")),
+    (r"mamba/gate_proj/w", ("w_embed", "ssm_inner")),
+    (r"mamba/out_proj/w", ("ssm_inner", "w_embed")),
+    (r"mamba/conv_w", (None, "ssm_inner")),
+    (r"mamba/(x_proj_b|x_proj_c|x_proj_dt)/w", ("ssm_inner", None)),
+    (r"mamba/(dt_bias|a_log|d_skip)", ("ssm_inner",)),
+    # xlstm
+    (r"b\d+_(mlstm|slstm)/(wq|wk|wv|wi|wf|wo_gate|wz)/w",
+     ("w_embed", "ssm_inner")),
+    (r"b\d+_(mlstm|slstm)/(wq|wk|wv|wi|wf|wo_gate|wz)/b", ("ssm_inner",)),
+    (r"b\d+_(mlstm|slstm)/r_h/w", (None, "ssm_inner")),
+    (r"b\d+_(mlstm|slstm)/proj_out/w", ("ssm_inner", "w_embed")),
+    # norms & scalars: replicated
+    (r".*(norm|ln)[^/]*/(scale|bias)", ()),
+    (r".*", ()),  # fallback: replicate
+)
+
+
+def param_specs(params: Any, rules: LogicalRules) -> Any:
+    """PartitionSpec pytree mirroring ``params`` via path-pattern rules."""
+
+    def leaf_spec(path, leaf):
+        pathstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+        for pat, logical in _PARAM_RULES:
+            if re.search(pat, pathstr):
+                if not logical:
+                    return P()
+                spec_axes = list(rules.spec(logical))
+                # right-align for stacked layer leading dims
+                extra = leaf.ndim - len(spec_axes)
+                if extra < 0:   # scalar-ish leaf vs wide rule
+                    spec_axes = spec_axes[-leaf.ndim:] if leaf.ndim else []
+                    extra = 0
+                return P(*([None] * extra + spec_axes))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)

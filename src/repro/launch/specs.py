@@ -1,0 +1,180 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero device allocation (assignment spec §2).
+
+Per cell kind:
+  train   -> (params, opt_state, batch{tokens,targets[,enc,patch]}, step)
+  prefill -> (params, batch)
+  decode  -> (params, cache, tokens(B,1), pos[, enc_out])
+
+All leaves carry their NamedSharding so `jit(...).lower(*specs)` needs no
+separate in_shardings pytree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..launch import sharding as shlib
+from ..models import transformer as model
+from ..models.layers import dtype_of
+from ..train.optimizer import get_optimizer, opt_state_specs
+
+GIANT_PARAM_BYTES = 8e9  # per-chip TP-sharded weight budget -> go 2D above
+
+
+def is_giant(cfg: ArchConfig, model_par: int = 16) -> bool:
+    return cfg.param_count() * (2 if cfg.param_dtype == "bfloat16" else 4) \
+        / model_par > GIANT_PARAM_BYTES
+
+
+def rules_for(cfg: ArchConfig, mesh: Mesh, kind: str,
+              shape: Optional[ShapeSpec] = None) -> shlib.LogicalRules:
+    multi_pod = "pod" in mesh.axis_names
+    model_par = mesh.shape["model"]
+    eap = cfg.n_experts > 0 and cfg.n_experts % model_par == 0
+    two_d = is_giant(cfg, model_par)
+    kv_axis = None
+    if kind == "decode" and shape is not None:
+        if shape.global_batch == 1:
+            # batch=1 frees every DP axis: flash-decode shards the cache's
+            # sequence dim across the whole mesh
+            kv_axis = ("pod", "data", "model") if multi_pod \
+                else ("data", "model")
+        else:
+            kv_axis = "model"
+    rules = shlib.default_rules(mesh, multi_pod=multi_pod,
+                                kv_seq_axis=kv_axis,
+                                expert_axis_parallel=eap,
+                                two_d_weights=two_d)
+    # tiny batches can't shard over the DP axes (long_500k has batch=1)
+    if shape is not None:
+        dp = rules.mapping["batch"]
+        dp_total = 1
+        for ax in (dp if isinstance(dp, tuple) else (dp,)):
+            dp_total *= mesh.shape[ax]
+        if shape.global_batch % dp_total != 0:
+            rules.mapping["batch"] = None
+    return rules
+
+
+def _with_shardings(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def param_structs(cfg: ArchConfig, mesh: Mesh, rules) -> Tuple[Any, Any]:
+    """(ShapeDtypeStructs-with-sharding, spec tree) for the params."""
+    shapes = jax.eval_shape(lambda: model.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    specs = shlib.param_specs(shapes, rules)
+    return _with_shardings(shapes, specs, mesh), specs
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, rules,
+                  with_targets: bool = True) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    dp = rules.mapping["batch"]
+    emb_dt = dtype_of(cfg.compute_dtype)
+    if cfg.n_patches:
+        s_tok = s - cfg.n_patches
+    else:
+        s_tok = s
+    out = {"tokens": jax.ShapeDtypeStruct(
+        (b, s_tok), jnp.int32, sharding=NamedSharding(mesh, P(dp)))}
+    if with_targets:
+        out["targets"] = jax.ShapeDtypeStruct(
+            (b, s_tok), jnp.int32, sharding=NamedSharding(mesh, P(dp)))
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq_len, cfg.d_model), emb_dt,
+            sharding=NamedSharding(mesh, P(dp)))
+    if cfg.n_patches:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), emb_dt,
+            sharding=NamedSharding(mesh, P(dp)))
+    return out
+
+
+def opt_structs(cfg: ArchConfig, mesh: Mesh, rules, param_shapes, param_specs):
+    opt = get_optimizer(cfg.optimizer)
+    s_shapes = jax.eval_shape(opt.init, param_shapes)
+    s_specs = opt_state_specs(cfg.optimizer, param_specs, s_shapes, mesh,
+                              data_axis="data")
+    return _with_shardings(s_shapes, s_specs, mesh), s_specs
+
+
+def cache_structs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, rules):
+    b, s = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: model.init_cache(cfg, b, s))
+    dp = rules.mapping["batch"]
+    kv_axis = rules.mapping.get("kv_seq")
+
+    dp_total = 1
+    if dp is not None:
+        for ax in (dp if isinstance(dp, tuple) else (dp,)):
+            dp_total *= mesh.shape[ax]
+
+    def spec_for(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if leaf.ndim == 5 and names[-1] in ("k", "v"):
+            return P(None, dp, kv_axis, None, None)
+        # recurrent states (possibly with extra stacked leading dims):
+        # find the batch axis by size, then shard the big inner dim on model
+        axes = [None] * leaf.ndim
+        batch_i = None
+        if dp is not None:
+            for i in range(leaf.ndim):
+                if leaf.shape[i] == b and b % dp_total == 0:
+                    axes[i] = dp
+                    batch_i = i
+                    break
+        for i in range(leaf.ndim - 1, -1, -1):
+            if i == batch_i:
+                continue
+            if leaf.shape[i] % mesh.shape["model"] == 0 and leaf.shape[i] >= 16:
+                axes[i] = "model"
+                break
+        return P(*axes)
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, shapes)
+    return _with_shardings(shapes, specs, mesh), specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                kind: Optional[str] = None):
+    """Everything `dryrun` needs to lower the cell, keyed by kind."""
+    kind = kind or shape.kind
+    rules = rules_for(cfg, mesh, kind, shape)
+    p_structs, p_specs = param_structs(cfg, mesh, rules)
+    if kind == "train":
+        o_structs, o_specs = opt_structs(cfg, mesh, rules, p_structs, p_specs)
+        batch = batch_structs(cfg, shape, mesh, rules)
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        return rules, (p_structs, o_structs, batch, step)
+    if kind == "prefill":
+        batch = batch_structs(cfg, shape, mesh, rules, with_targets=False)
+        return rules, (p_structs, batch)
+    if kind == "decode":
+        cache, _ = cache_structs(cfg, shape, mesh, rules)
+        dp = rules.mapping["batch"]
+        toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                    sharding=NamedSharding(mesh, P(dp)))
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        extras = ()
+        if cfg.is_encoder_decoder:
+            enc = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.enc_seq_len, cfg.d_model),
+                dtype_of(cfg.compute_dtype),
+                sharding=NamedSharding(mesh, P(dp)))
+            extras = (enc,)
+        return rules, (p_structs, cache, toks, pos) + extras
+    raise ValueError(kind)

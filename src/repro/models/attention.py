@@ -1,0 +1,292 @@
+"""Attention: GQA + RoPE (+ optional QKV bias), flash-style chunking, decode.
+
+Three execution modes:
+
+* ``attention_train``   — full-sequence causal (or bidirectional) attention,
+  computed **chunked** over query/key blocks with a running-softmax carry
+  (flash attention in pure JAX).  Nothing of shape (S, S) is ever
+  materialized, which is what makes the 32k-prefill cells feasible:
+  peak extra memory is (B, H, q_chunk, k_chunk) per step.
+* ``attention_decode``  — one query token against a static KV cache with a
+  position mask (memory-bound by design; the roofline shows it).
+* sequence-sharded decode for 500k contexts lives in serve/flash_decode.py.
+
+The causal chunk loop supports **triangle skipping**: with causal=True only
+the lower-triangular (qi >= ki) chunk pairs are computed — an HLO-visible
+2× FLOP reduction on causal attention (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import shard
+from .layers import dense, dense_init
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, D/2)
+    cos = jnp.cos(angles)[..., :, None, :]                  # (S, 1, D/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              dtype, qkv_bias: bool = False) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype, bias=qkv_bias),
+        "wk": dense_init(kk, d_model, n_kv_heads * head_dim, dtype, bias=qkv_bias),
+        "wv": dense_init(kv, d_model, n_kv_heads * head_dim, dtype, bias=qkv_bias),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _project_qkv(p: Params, x: jax.Array, n_heads: int, n_kv_heads: int,
+                 head_dim: int, compute_dtype):
+    b, s, _ = x.shape
+    q = dense(p["wq"], x, compute_dtype).reshape(b, s, n_heads, head_dim)
+    k = dense(p["wk"], x, compute_dtype).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(p["wv"], x, compute_dtype).reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) core
+# ---------------------------------------------------------------------------
+
+
+def _fit_chunk(s: int, desired: int) -> int:
+    """Largest chunk <= desired that divides s (whisper's 1536 frames etc.)."""
+    c = min(desired, s)
+    while s % c:
+        c -= 1
+    return max(c, 1)
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D) by head replication."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)
+                            ).reshape(b, s, h * groups, d)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_chunk", "k_chunk",
+                                             "skip_upper_triangle"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_chunk: int = 1024,
+                    k_chunk: int = 1024,
+                    skip_upper_triangle: bool = True) -> jax.Array:
+    """Memory-efficient attention. q,k,v: (B, S, H, D) with equal H.
+
+    Scans over query chunks (outer) and key chunks (inner) carrying running
+    (max, denominator, accumulator) — flash attention in pure JAX.
+
+    ``causal and skip_upper_triangle`` statically unrolls the query-chunk
+    loop so each query chunk's inner scan stops at the diagonal: the 2×
+    causal-FLOP saving is visible to ``compiled.cost_analysis()`` (this is
+    the "triangle skipping" perf move in EXPERIMENTS.md §Perf; baseline mode
+    computes the full rectangle like a naive port would).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    q_chunk = _fit_chunk(sq, q_chunk)
+    k_chunk = _fit_chunk(sk, k_chunk)
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = 1.0 / (d ** 0.5)
+
+    qc = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,D)
+    kc = k.reshape(b, nk, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    neg = jnp.float32(-1e30)
+
+    def make_k_step(q_i, qi):
+        def k_step(carry, ki):
+            acc, m, l = carry
+            k_i, v_i = kc[ki], vc[ki]
+            s_ij = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_i,
+                              preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * k_chunk + jnp.arange(k_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s_ij = jnp.where(mask[None, None], s_ij, neg)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1, keepdims=True))
+            p_ij = jnp.exp(s_ij - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p_ij, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p_ij.astype(v_i.dtype), v_i,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        return k_step
+
+    def init_carry():
+        return (jnp.zeros((b, h, q_chunk, d), jnp.float32),
+                jnp.full((b, h, q_chunk, 1), neg),
+                jnp.zeros((b, h, q_chunk, 1), jnp.float32))
+
+    if causal and skip_upper_triangle:
+        # static unroll over query chunks; inner scan stops at the diagonal
+        outs = []
+        for qi in range(nq):
+            n_valid = (qi * q_chunk) // k_chunk + 1
+            (acc, m, l), _ = jax.lax.scan(make_k_step(qc[qi], qi),
+                                          init_carry(), jnp.arange(n_valid))
+            outs.append(acc / jnp.maximum(l, 1e-30))
+        stacked = jnp.stack(outs)                      # (nq, B, H, qc, D)
+    else:
+        def q_block(qi):
+            (acc, m, l), _ = jax.lax.scan(make_k_step(qc[qi], qi),
+                                          init_carry(), jnp.arange(nk))
+            return acc / jnp.maximum(l, 1e-30)
+
+        stacked = jax.lax.map(q_block, jnp.arange(nq))
+
+    return stacked.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public layer entry points
+# ---------------------------------------------------------------------------
+
+
+def attention_train(p: Params, x: jax.Array, cfg, *, causal: bool = True,
+                    positions: Optional[jax.Array] = None,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    chunk: int = 1024,
+                    skip_upper_triangle: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: (B, S, d_model)."""
+    compute = x.dtype
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, h, hkv, hd, compute)
+    if kv_override is not None:   # cross-attention: K/V from encoder states
+        enc = kv_override[0]
+        se = enc.shape[1]
+        k = dense(p["wk"], enc, compute).reshape(b, se, hkv, hd)
+        v = dense(p["wv"], enc, compute).reshape(b, se, hkv, hd)
+        causal = False            # no RoPE across modalities
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", "seq", "heads", None))
+    # constrain K/V only after GQA head replication: kv_heads rarely divide
+    # the model axis (qwen2.5 has 2), the replicated head dim always does
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    k = shard(k, ("batch", "seq", "heads", None))
+    v = shard(v, ("batch", "seq", "heads", None))
+    out = flash_attention(q, k, v, causal=causal, q_chunk=chunk, k_chunk=chunk,
+                          skip_upper_triangle=skip_upper_triangle)
+    out = shard(out, ("batch", "seq", "heads", None))
+    return dense(p["wo"], out.reshape(b, s, h * hd), compute)
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int,
+                  dtype) -> Params:
+    return {
+        "k": jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+    }
+
+
+def attention_prefill(p: Params, x: jax.Array, cfg, cache: Params,
+                      chunk: int = 1024) -> Tuple[jax.Array, Params]:
+    """Causal attention over the prompt, filling the cache in one shot."""
+    compute = x.dtype
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, h, hkv, hd, compute)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+    }
+    kf = _repeat_kv(k, h // hkv)
+    vf = _repeat_kv(v, h // hkv)
+    out = flash_attention(q, kf, vf, causal=True, q_chunk=chunk, k_chunk=chunk)
+    y = dense(p["wo"], out.reshape(b, s, h * hd), compute)
+    return y, new_cache
+
+
+def attention_decode(p: Params, x: jax.Array, cfg, cache: Params,
+                     pos: jax.Array,
+                     kv_override: Optional[Tuple[jax.Array, jax.Array]] = None
+                     ) -> Tuple[jax.Array, Params]:
+    """One-token decode. x: (B, 1, d_model); cache K/V: (B, S_max, Hkv, D)."""
+    compute = x.dtype
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    q = dense(p["wq"], x, compute).reshape(b, 1, h, hd)
+    if kv_override is None:       # cross-attention skips RoPE (as in train)
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+
+    if kv_override is None:
+        k1 = dense(p["wk"], x, compute).reshape(b, 1, hkv, hd)
+        v1 = dense(p["wv"], x, compute).reshape(b, 1, hkv, hd)
+        k1 = apply_rope(k1, pos[None], cfg.rope_theta)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k1.astype(cache["k"].dtype), pos, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v1.astype(cache["v"].dtype), pos, axis=1),
+        }
+        valid_upto = pos + 1
+        k = cache["k"].astype(compute)
+        v = cache["v"].astype(compute)
+    else:
+        # cross-attention: project the encoder states (matches train path)
+        enc = kv_override[0]
+        se = enc.shape[1]
+        k = dense(p["wk"], enc, compute).reshape(b, se, hkv, hd)
+        v = dense(p["wv"], enc, compute).reshape(b, se, hkv, hd)
+        valid_upto = jnp.asarray(se)
+    s_max = k.shape[1]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    mask = jnp.arange(s_max)[None, None, None, :] < valid_upto
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(compute)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v,
+                     preferred_element_type=jnp.float32).astype(compute)
+    y = dense(p["wo"], out.reshape(b, 1, h * hd), compute)
+    return y, cache

@@ -1,0 +1,120 @@
+"""Common NN layers (functional, params-as-pytrees — no framework deps).
+
+Conventions
+-----------
+* ``init_*`` functions build param dicts in ``cfg.param_dtype``.
+* ``*_apply`` functions cast to ``cfg.compute_dtype`` internally and return
+  activations in compute dtype (norms accumulate in f32).
+* Logical activation sharding goes through :func:`repro.launch.sharding.shard`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dtype_of", "dense_init", "dense", "norm_init", "norm_apply",
+    "embed_init", "embed_apply", "unembed_apply", "mlp_init", "mlp_apply",
+]
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    scale = 1.0 / (d_in ** 0.5)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    y = jnp.dot(x.astype(compute_dtype), p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed_apply(p: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed_apply(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    """Logits = x @ tableᵀ (used tied or with a separate lm_head table)."""
+    return jnp.dot(x.astype(compute_dtype),
+                   p["table"].astype(compute_dtype).T)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, d, d_ff, dtype),
+         "wo": dense_init(k2, d_ff, d, dtype)}
+    if act == "swiglu":
+        p["wg"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str, compute_dtype,
+              shard=None) -> jax.Array:
+    h = dense(p["wi"], x, compute_dtype)
+    if act == "swiglu":
+        g = dense(p["wg"], x, compute_dtype)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    if shard is not None:
+        h = shard(h, ("batch", "seq", "ff"))
+    return dense(p["wo"], h, compute_dtype)

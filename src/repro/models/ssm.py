@@ -1,0 +1,136 @@
+"""Mamba-style selective SSM block (jamba's sub-quadratic mixer).
+
+Selective state space: per-timestep input-dependent (Δ, B, C) with diagonal
+A.  Train runs a **chunked scan**: sequential `lax.scan` over time chunks,
+each chunk materializing only (batch, chunk, d_inner, d_state) — the HBM-
+friendly middle ground between a pure time scan (too serial) and a full
+associative scan (too much memory at 4k × d_inner 16k).  Decode carries the
+(batch, d_inner, d_state) state — O(1) per token, which is what makes the
+500k-context cells runnable (DESIGN.md §Arch-applicability).
+
+The depthwise causal conv is included (width 4, as in Mamba); the modality
+of jamba's conv is faithful, the kernel weights are ours.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import shard
+from .layers import dense, dense_init
+
+Params = Dict
+
+
+def mamba_init(key, d_model: int, cfg, dtype) -> Params:
+    di = d_model * cfg.ssm_expand
+    n = cfg.ssm_state_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], d_model, di, dtype),
+        "gate_proj": dense_init(ks[1], d_model, di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv_width, di)) * 0.2
+                   ).astype(dtype),
+        "x_proj_b": dense_init(ks[3], di, n, dtype),
+        "x_proj_c": dense_init(ks[4], di, n, dtype),
+        "x_proj_dt": dense_init(ks[5], di, 1, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(n), n))[None, :].repeat(di, 0
+                  ).astype(dtype),                       # (di, n)
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[6], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, di); w: (W, di)."""
+    wdt = w.shape[0]
+    pad = jnp.zeros(x.shape[:1] + (wdt - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(wdt):                                   # W is tiny (4)
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def _ssm_params(p: Params, u: jax.Array, compute):
+    """Input-dependent (dA, dBu, C) for a chunk. u: (B, L, di)."""
+    n = p["a_log"].shape[1]
+    bmat = dense(p["x_proj_b"], u, compute)                # (B, L, n)
+    cmat = dense(p["x_proj_c"], u, compute)                # (B, L, n)
+    dt = jax.nn.softplus(dense(p["x_proj_dt"], u, compute)
+                         + p["dt_bias"].astype(compute))   # (B, L, di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (di, n)
+    da = jnp.exp(dt[..., None].astype(jnp.float32) * a)    # (B, L, di, n)
+    dbu = (dt * u).astype(jnp.float32)[..., None] * \
+        bmat.astype(jnp.float32)[..., None, :]             # (B, L, di, n)
+    return da, dbu, cmat.astype(jnp.float32)
+
+
+def mamba_train(p: Params, x: jax.Array, cfg, chunk: int = 256) -> jax.Array:
+    """Full-sequence selective scan. x: (B, S, d_model)."""
+    compute = x.dtype
+    b, s, _ = x.shape
+    u = dense(p["in_proj"], x, compute)
+    z = dense(p["gate_proj"], x, compute)
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"].astype(compute)))
+    u = shard(u, ("batch", "seq", "ssm_inner"))
+    di = u.shape[-1]
+    n = p["a_log"].shape[1]
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    uc = u.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)  # (nc, B, L, di)
+
+    def chunk_step(h, u_i):
+        da, dbu, c = _ssm_params(p, u_i, compute)          # (B,L,di,n) ×2
+        # within-chunk associative scan on (a, b) pairs: h' = a·h + b
+        def combine(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+        hs = a_cum * h[:, None] + b_cum                     # (B, L, di, n)
+        y = jnp.einsum("bldn,bln->bld", hs, c)              # contract state
+        h_next = hs[:, -1]
+        return h_next, y.astype(compute)
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, uc)                # (nc, B, L, di)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y + u * p["d_skip"].astype(compute)
+    y = y * jax.nn.silu(z)
+    return dense(p["out_proj"], y, compute)
+
+
+def mamba_init_cache(batch: int, d_model: int, cfg, dtype) -> Params:
+    di = d_model * cfg.ssm_expand
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, cfg, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One-token step. x: (B, 1, d_model); O(1) state update."""
+    compute = x.dtype
+    b = x.shape[0]
+    u = dense(p["in_proj"], x, compute)                    # (B, 1, di)
+    z = dense(p["gate_proj"], x, compute)
+    # rolling conv window
+    win = jnp.concatenate([cache["conv"], u], axis=1)      # (B, W, di)
+    w = p["conv_w"].astype(compute)
+    u1 = jax.nn.silu(jnp.einsum("bwd,wd->bd", win, w))[:, None]  # (B, 1, di)
+    da, dbu, c = _ssm_params(p, u1, compute)               # L=1
+    h = cache["h"] * da[:, 0] + dbu[:, 0]                  # (B, di, n)
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])[:, None]      # (B, 1, di)
+    y = y.astype(compute) + u1 * p["d_skip"].astype(compute)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y, compute)
+    return out, {"h": h, "conv": win[:, 1:]}

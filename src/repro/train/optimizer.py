@@ -1,0 +1,209 @@
+"""Optimizers: AdamW + Adafactor, global-norm clipping, ZeRO-style state
+sharding helpers.  Functional (state is a pytree), no external deps.
+
+Adafactor (factored second moments) is selected for the ≥300 B-param archs
+(grok, jamba, qwen3-moe): Adam's two f32 state tensors would exceed a single
+pod's 4 TB HBM (DESIGN.md §5), Adafactor's row/col factors are ~d+f instead
+of d·f per matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptHyper:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    epsilon1: float = 1e-30
+    epsilon2: float = 1e-3
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(params, grads, state, step, h: OptHyper):
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - h.beta1 ** t
+    bc2 = 1.0 - h.beta2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = h.beta1 * m + (1 - h.beta1) * g
+        v_new = h.beta2 * v + (1 - h.beta2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + h.eps) + h.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - h.lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments, no momentum
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params) -> Dict:
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(init, params,
+                              is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(params, grads, state, step, h: OptHyper):
+    t = step.astype(jnp.float32) + 1.0
+    rho = 1.0 - t ** (-h.decay_rate)
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + h.epsilon1
+        if _factored(p.shape):
+            vr = rho * s["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+            vc = rho * s["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), h.epsilon1)
+            update = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+                          + h.epsilon2)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = rho * s["v"] + (1 - rho) * g2
+            update = g / (jnp.sqrt(v) + h.epsilon2)
+            new_s = {"v": v}
+        # update clipping (RMS <= 1) as in the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + h.epsilon1)
+        update = update / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32) - h.lr * update
+                 - h.lr * h.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["f"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"f": treedef.unflatten([o[1] for o in out])})
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (params, grads, state, step, hyper) -> (params, state)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(adamw_init, adamw_update)
+    if name == "adafactor":
+        return Optimizer(adafactor_init, adafactor_update)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 style optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+
+def zero1_extend_spec(spec, shape, mesh, data_axis="data"):
+    """Extend one PartitionSpec by sharding the first large replicated dim
+    over the data axis — ZeRO-1 semantics under GSPMD (the optimizer state
+    lives reduce-scattered across data-parallel replicas)."""
+    from jax.sharding import PartitionSpec as P
+
+    dsize = 1
+    for ax in (data_axis if isinstance(data_axis, tuple) else (data_axis,)):
+        dsize *= mesh.shape[ax]
+    axes = list(spec) if spec is not None else []
+    axes = axes + [None] * (len(shape) - len(axes))
+    axes = axes[: len(shape)]
+    # the data axis can appear at most once across the whole spec
+    used = set()
+    for a in axes:
+        for x in (a if isinstance(a, tuple) else (a,)):
+            used.add(x)
+    dnames = set(data_axis if isinstance(data_axis, tuple) else (data_axis,))
+    if used & dnames:
+        return P(*axes)
+    for i in range(len(shape)):
+        if axes[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+            axes[i] = data_axis
+            break
+    return P(*axes)
+
+
+def opt_state_specs(opt_name: str, param_specs, state_shapes, mesh,
+                    data_axis="data", zero1: bool = True):
+    """PartitionSpec tree for the optimizer state.
+
+    adamw: m/v mirror params -> reuse (optionally ZeRO-extended) param specs.
+    adafactor: factored leaves get their largest dim sharded over data.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if opt_name == "adamw":
+        def one(spec, shaped):
+            if zero1:
+                return zero1_extend_spec(spec, shaped.shape, mesh, data_axis)
+            return spec
+        m = jax.tree.map(one, param_specs, state_shapes["m"])
+        v = jax.tree.map(one, param_specs, state_shapes["v"])
+        return {"m": m, "v": v}
+    # adafactor: shapes don't mirror params; shard biggest dim over data
+    def fac(shaped):
+        if zero1:
+            return zero1_extend_spec(P(), shaped.shape, mesh, data_axis)
+        return P()
+    return {"f": jax.tree.map(fac, state_shapes["f"])}

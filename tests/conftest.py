@@ -1,0 +1,23 @@
+import os
+
+# Tests run on the single real CPU device; only dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_digraph(rng, n=60, m=300, seed=None):
+    """(src, dst) dense-id edge arrays without self loops, deduped."""
+    r = np.random.default_rng(seed) if seed is not None else rng
+    s = r.integers(0, n, m)
+    d = r.integers(0, n, m)
+    keep = s != d
+    pairs = sorted(set(zip(s[keep].tolist(), d[keep].tolist())))
+    return (np.asarray([p[0] for p in pairs], np.int32),
+            np.asarray([p[1] for p in pairs], np.int32))

@@ -1,0 +1,280 @@
+"""Graph algorithms vs brute-force numpy/python oracles (paper Tables 3/6)."""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.core import algorithms as A
+from conftest import random_digraph
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+
+def np_pagerank(edges, n, it=10, d=0.85):
+    pr = np.full(n, 1.0 / n)
+    outdeg = np.zeros(n)
+    for s, _ in edges:
+        outdeg[s] += 1
+    for _ in range(it):
+        new = np.full(n, (1 - d) / n)
+        new += d * pr[outdeg == 0].sum() / n
+        for s, t in edges:
+            new[t] += d * pr[s] / outdeg[s]
+        pr = new
+    return pr
+
+
+def canon(lbl):
+    first, out = {}, []
+    for x in lbl:
+        out.append(first.setdefault(x, len(first)))
+    return out
+
+
+def kosaraju(edges, n):
+    adj_f, adj_b = collections.defaultdict(list), collections.defaultdict(list)
+    for a, b in edges:
+        adj_f[a].append(b)
+        adj_b[b].append(a)
+    visited, order = [False] * n, []
+    for u0 in range(n):
+        if visited[u0]:
+            continue
+        stack = [(u0, 0)]
+        visited[u0] = True
+        while stack:
+            v, i = stack.pop()
+            if i < len(adj_f[v]):
+                stack.append((v, i + 1))
+                w = adj_f[v][i]
+                if not visited[w]:
+                    visited[w] = True
+                    stack.append((w, 0))
+            else:
+                order.append(v)
+    comp, c = [-1] * n, 0
+    for u in reversed(order):
+        if comp[u] != -1:
+            continue
+        stack = [u]
+        comp[u] = c
+        while stack:
+            v = stack.pop()
+            for w in adj_b[v]:
+                if comp[w] == -1:
+                    comp[w] = c
+                    stack.append(w)
+        c += 1
+    return comp
+
+
+def dense_edges(g):
+    s, d = (np.asarray(x) for x in g.out_edges())
+    return list(zip(s.tolist(), d.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# tests (multiple seeds)
+# ---------------------------------------------------------------------------
+
+SEEDS = [1, 2, 5]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_pagerank_matches_oracle(rng, seed):
+    s, d = random_digraph(rng, n=50, m=260, seed=seed)
+    g = Graph.from_edges(s, d)
+    pr = np.asarray(A.pagerank(g, n_iter=10))
+    oracle = np_pagerank(dense_edges(g), g.n_nodes)
+    np.testing.assert_allclose(pr, oracle, atol=1e-6)
+    assert abs(pr.sum() - 1.0) < 1e-4
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_triangles_match_oracle(rng, seed):
+    s, d = random_digraph(rng, n=50, m=300, seed=seed)
+    u = Graph.from_edges(s, d).to_undirected()
+    es, ed = (np.asarray(x) for x in u.out_edges())
+    und = set((min(a, b), max(a, b)) for a, b in zip(es.tolist(), ed.tolist()))
+    adj = collections.defaultdict(set)
+    for a, b in und:
+        adj[a].add(b)
+        adj[b].add(a)
+    oracle = sum(len(adj[a] & adj[b]) for a, b in und) // 3
+    assert A.triangle_count(u) == oracle
+
+
+def test_per_node_triangles_and_clustering(rng):
+    s, d = random_digraph(rng, n=40, m=250, seed=9)
+    u = Graph.from_edges(s, d).to_undirected()
+    es, ed = (np.asarray(x) for x in u.out_edges())
+    und = set((min(a, b), max(a, b)) for a, b in zip(es.tolist(), ed.tolist()))
+    adj = collections.defaultdict(set)
+    for a, b in und:
+        adj[a].add(b)
+        adj[b].add(a)
+    per = np.zeros(u.n_nodes, int)
+    for a, b in und:
+        for c in adj[a] & adj[b]:
+            if b < c:
+                per[a] += 1
+                per[b] += 1
+                per[c] += 1
+    got = np.asarray(A.per_node_triangles(u))
+    assert np.array_equal(got, per)
+    cc = np.asarray(A.clustering_coefficient(u))
+    deg = np.asarray(u.out_degrees())
+    wedge = deg * (deg - 1) / 2
+    expect = np.divide(per, np.maximum(wedge, 1), where=wedge > 0)
+    np.testing.assert_allclose(cc[wedge > 0], expect[wedge > 0], atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_connected_components(rng, seed):
+    s, d = random_digraph(rng, n=60, m=90, seed=seed)  # sparse -> many comps
+    g = Graph.from_edges(s, d)
+    lab = np.asarray(A.connected_components(g))
+    parent = list(range(g.n_nodes))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in dense_edges(g):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+    oracle = [find(i) for i in range(g.n_nodes)]
+    assert canon(lab.tolist()) == canon(oracle)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scc_matches_kosaraju(rng, seed):
+    s, d = random_digraph(rng, n=40, m=120, seed=seed)
+    g = Graph.from_edges(s, d)
+    got = np.asarray(A.strongly_connected_components(g))
+    oracle = kosaraju(dense_edges(g), g.n_nodes)
+    assert canon(got.tolist()) == canon(oracle)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_sssp_bellman_ford(rng, seed):
+    s, d = random_digraph(rng, n=50, m=200, seed=seed)
+    g = Graph.from_edges(s, d)
+    dist = np.asarray(A.sssp(g, 0))
+    INF = float("inf")
+    do = [INF] * g.n_nodes
+    do[0] = 0
+    for _ in range(g.n_nodes):
+        for a, b in dense_edges(g):
+            if do[a] + 1 < do[b]:
+                do[b] = do[a] + 1
+    got = np.where(np.isinf(dist), -1, dist)
+    want = [-1 if x == INF else x for x in do]
+    np.testing.assert_allclose(got, want)
+
+
+def test_bfs_levels(rng):
+    g = Graph.from_edges([0, 1, 2], [1, 2, 3])
+    assert np.asarray(A.bfs(g, 0)).tolist() == [0, 1, 2, 3]
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_k_core_peeling(rng, k):
+    s, d = random_digraph(rng, n=50, m=300, seed=11)
+    g = Graph.from_edges(s, d)
+    u = g.to_undirected()
+    es, ed = (np.asarray(x) for x in u.out_edges())
+    adj = collections.defaultdict(set)
+    for a, b in zip(es.tolist(), ed.tolist()):
+        adj[a].add(b)
+    alive = set(range(u.n_nodes))
+    changed = True
+    while changed:
+        changed = False
+        for v in list(alive):
+            if len(adj[v] & alive) < k:
+                alive.discard(v)
+                changed = True
+    got = np.asarray(A.k_core(g, k))
+    uids = np.asarray(u.node_ids[:u.n_nodes])
+    gids = np.asarray(g.node_ids[:g.n_nodes])
+    want = np.isin(gids, uids[sorted(alive)]) if alive else \
+        np.zeros(g.n_nodes, bool)
+    assert np.array_equal(got, want)
+
+
+def test_core_numbers_monotone(rng):
+    s, d = random_digraph(rng, n=40, m=220, seed=13)
+    g = Graph.from_edges(s, d)
+    core = np.asarray(A.core_numbers(g))
+    for k in range(1, int(core.max()) + 1):
+        mask = np.asarray(A.k_core(g, k))
+        assert np.array_equal(mask, core >= k)
+
+
+def test_hits_finite_and_normalized(rng):
+    s, d = random_digraph(rng, n=40, m=200, seed=17)
+    g = Graph.from_edges(s, d)
+    hub, auth = A.hits(g, n_iter=15)
+    hub, auth = np.asarray(hub), np.asarray(auth)
+    assert np.isfinite(hub).all() and np.isfinite(auth).all()
+    assert abs(np.linalg.norm(hub) - 1.0) < 1e-4
+    assert abs(np.linalg.norm(auth) - 1.0) < 1e-4
+
+
+def test_degree_histogram(rng):
+    g = Graph.from_edges([0, 0, 1], [1, 2, 2])
+    hist = np.asarray(A.degree_histogram(g, "out"))
+    assert hist.tolist() == [1, 1, 1]  # node2:0, node1:1, node0:2
+
+
+def test_pagerank_bsr_kernel_path_agrees(rng):
+    from repro.kernels import ops
+    s, d = random_digraph(rng, n=90, m=400, seed=23)
+    g = Graph.from_edges(s, d)
+    pr_seg = np.asarray(A.pagerank(g, n_iter=5))
+    pr_bsr = np.asarray(ops.pagerank_bsr(g, n_iter=5))
+    np.testing.assert_allclose(pr_bsr, pr_seg, atol=1e-5)
+
+
+def test_triangle_bsr_kernel_path_agrees(rng):
+    from repro.kernels import ops
+    s, d = random_digraph(rng, n=70, m=350, seed=29)
+    u = Graph.from_edges(s, d).to_undirected()
+    assert ops.triangle_count_bsr(u) == A.triangle_count(u)
+
+
+def test_eigenvector_centrality_star():
+    # star graph: center receives all edges -> dominant centrality
+    g = Graph.from_edges([1, 2, 3, 4], [0, 0, 0, 0])
+    x = np.asarray(A.eigenvector_centrality(g, n_iter=30))
+    assert x[0] == x.max() and x[0] > 0
+
+
+def test_degree_centrality():
+    g = Graph.from_edges([0, 0, 1], [1, 2, 2])
+    c = np.asarray(A.degree_centrality(g, "out"))
+    assert c[0] == pytest.approx(1.0)     # deg 2 / (n-1)=2
+
+
+def test_label_propagation_two_cliques():
+    # two disconnected triangles -> two communities
+    g = Graph.from_edges([0, 1, 2, 3, 4, 5], [1, 2, 0, 4, 5, 3])
+    lab = np.asarray(A.label_propagation(g))
+    assert len(set(lab[:3])) == 1 and len(set(lab[3:])) == 1
+    assert lab[0] != lab[3]
+
+
+def test_closeness_centrality_path():
+    # path 0-1-2 (undirected edges both ways): middle node is closest
+    g = Graph.from_edges([0, 1, 1, 2], [1, 0, 2, 1])
+    c = np.asarray(A.closeness_centrality(g, sources=None, n_samples=3))
+    assert c[1] == c.max()

@@ -1,0 +1,92 @@
+"""Distributed graph engine + DDP: runs in a subprocess with 8 host devices
+(XLA_FLAGS can't change after jax init, so isolation is required)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8
+
+    from repro.core.graph import Graph
+    from repro.core import algorithms as A
+    from repro.core.distributed import (make_graph_mesh, shard_graph,
+        pagerank_distributed, distributed_to_graph,
+        triangle_count_distributed, degrees_distributed)
+
+    rng = np.random.default_rng(3)
+    n, m = 400, 2400
+    s = rng.integers(0, n, m); d = rng.integers(0, n, m)
+    keep = s != d; s, d = s[keep], d[keep]
+    g = Graph.from_edges(s, d, dedupe=True)
+    mesh = make_graph_mesh()
+
+    # distributed pagerank == single-device pagerank
+    dg = shard_graph(g, mesh)
+    pr_d = np.asarray(pagerank_distributed(dg, mesh, n_iter=8))
+    pr_s = np.asarray(A.pagerank(g, n_iter=8))
+    assert np.abs(pr_d - pr_s).max() < 1e-6, "dist pagerank mismatch"
+
+    # bf16-compressed collective stays close
+    pr_c = np.asarray(pagerank_distributed(dg, mesh, n_iter=8,
+                                           compress_bf16=True))
+    assert np.abs(pr_c - pr_s).max() < 5e-5, "bf16 pagerank too lossy"
+
+    # distributed conversion (sort-first + all_to_all) feeds pagerank
+    sd, dd = (np.asarray(x) for x in g.out_edges())
+    dg2 = distributed_to_graph(jnp.asarray(sd), jnp.asarray(dd),
+                               g.n_nodes, mesh)
+    pr_d2 = np.asarray(pagerank_distributed(dg2, mesh, n_iter=8))
+    assert np.abs(pr_d2 - pr_s).max() < 1e-6, "dist conversion mismatch"
+
+    deg = np.asarray(degrees_distributed(dg, mesh))
+    assert np.array_equal(deg, np.asarray(g.in_degrees())), "degrees"
+
+    u = g.to_undirected()
+    t_d = triangle_count_distributed(u, mesh, edge_chunk=256)
+    assert t_d == A.triangle_count(u), "dist triangles"
+
+    # explicit DDP with int8 gradient compression trains
+    from repro.configs.base import get_config, reduced
+    from repro.train.step import make_ddp_step, init_train_state
+    from repro.train.compress import init_error_feedback
+    from repro.train.optimizer import OptHyper
+    from jax.sharding import PartitionSpec as P
+    cfg = reduced(get_config("qwen2.5-3b"))
+    mesh2 = jax.make_mesh((8,), ("data",))
+    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = make_ddp_step(cfg, mesh2, OptHyper(lr=1e-3), compress=True,
+                         attn_chunk=16)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0,
+                                          cfg.vocab_size),
+             "targets": jax.random.randint(jax.random.PRNGKey(2), (16, 16), 0,
+                                           cfg.vocab_size)}
+    res = init_error_feedback(params)
+    losses = []
+    for i in range(4):
+        params, opt_state, loss, res = step(params, opt_state, batch,
+                                            jnp.int32(i), res)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], f"no descent: {losses}"
+
+    print("DISTRIBUTED-OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_suite():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run([sys.executable, "-W", "ignore", "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=540,
+                          env=env, cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert "DISTRIBUTED-OK" in proc.stdout, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"

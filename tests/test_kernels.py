@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bsr_spmv import bsr_spmv
+from repro.kernels.bsr_tricount import bsr_tricount
+from repro.kernels.segment_sum import segment_sum_chunked
+
+
+def _random_bsr(rng, n_row_blocks, n_col_blocks, b, nnzb, dtype):
+    rows = np.sort(rng.integers(0, n_row_blocks, nnzb)).astype(np.int32)
+    # ensure every row block appears (kernel contract)
+    rows[:n_row_blocks] = np.arange(n_row_blocks)
+    rows = np.sort(rows)
+    cols = rng.integers(0, n_col_blocks, nnzb).astype(np.int32)
+    tiles = rng.normal(size=(nnzb, b, b)).astype(dtype)
+    return jnp.asarray(tiles), jnp.asarray(rows), jnp.asarray(cols)
+
+
+@pytest.mark.parametrize("b", [8, 16, 128])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_bsr_spmv_sweep(rng, b, dtype):
+    nrb, ncb, nnzb = 4, 3, 10
+    tiles, rows, cols = _random_bsr(rng, nrb, ncb, b, nnzb, np.float32)
+    tiles = tiles.astype(dtype)
+    x = jnp.asarray(rng.normal(size=(ncb, b)).astype(np.float32))
+    y = bsr_spmv(tiles, rows, cols, x, nrb, interpret=True)
+    y_ref = ref.bsr_spmv_ref(tiles, rows, cols, x, nrb)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("b", [8, 128])
+def test_bsr_spmv_duplicate_tiles_accumulate(rng, b):
+    # two tiles on the same (row, col) must sum
+    tiles = jnp.asarray(rng.normal(size=(2, b, b)).astype(np.float32))
+    rows = jnp.asarray([0, 0], jnp.int32)
+    cols = jnp.asarray([0, 0], jnp.int32)
+    x = jnp.asarray(rng.normal(size=(1, b)).astype(np.float32))
+    y = bsr_spmv(tiles, rows, cols, x, 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(y)[0],
+                               np.asarray((tiles[0] + tiles[1]) @ x[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,b", [(64, 8), (300, 16), (260, 128)])
+def test_bsr_tricount_sweep(rng, n, b):
+    # random symmetric simple graph
+    m = n * 4
+    s = rng.integers(0, n, m)
+    d = rng.integers(0, n, m)
+    keep = s != d
+    s, d = s[keep], d[keep]
+    src = np.concatenate([s, d])
+    dst = np.concatenate([d, s])
+    tiles, rows, cols, nb = ops.edges_to_bsr(src, dst, n, block=b)
+    tiles = jnp.minimum(tiles, 1.0)
+    tij, tik, tkj = ops.build_block_triples(np.asarray(rows), np.asarray(cols))
+    six_t = bsr_tricount(tiles, tij, tik, tkj, interpret=True)
+    want = ref.bsr_tricount_ref(tiles, rows, cols, nb)
+    assert int(round(float(six_t))) == int(round(float(want)))
+
+
+@pytest.mark.parametrize("e,n_seg,chunk", [(100, 40, 16), (1000, 700, 64),
+                                           (5000, 260, 512)])
+def test_segment_sum_sweep(rng, e, n_seg, chunk):
+    seg = np.sort(rng.integers(0, n_seg, e))
+    vals = rng.normal(size=e).astype(np.float32)
+    got = ops.segment_sum_sorted(jnp.asarray(vals), jnp.asarray(seg), n_seg,
+                                 chunk=chunk, interpret=True)
+    want = jax.ops.segment_sum(jnp.asarray(vals), jnp.asarray(seg),
+                               num_segments=n_seg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segment_sum_chunked_vs_chunked_ref(rng):
+    c, l = 6, 32
+    vals = jnp.asarray(rng.normal(size=(c, l)).astype(np.float32))
+    lids = jnp.asarray(rng.integers(0, 129, size=(c, l)).astype(np.int32))
+    blk = jnp.asarray(np.sort(rng.integers(0, 3, c)).astype(np.int32))
+    blk = blk.at[:3].set(jnp.arange(3, dtype=jnp.int32))
+    blk = jnp.sort(blk)
+    got = segment_sum_chunked(vals, lids, blk, 3, interpret=True)
+    want = ref.segment_sum_chunked_ref(vals, lids, blk, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_graph_tricount():
+    assert ops.triangle_count_bsr(
+        __import__("repro.core.graph", fromlist=["Graph"]).Graph.from_edges(
+            [0], [1]).to_undirected(), interpret=True) == 0
+
+
+# ---------------------------------------------------------------------------
+# flash attention forward kernel (§Perf follow-up; serving path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,d,causal,chunk", [
+    (2, 64, 3, 16, True, 16),
+    (1, 128, 2, 32, False, 32),
+    (2, 96, 1, 8, True, 32),      # non-pow2 seq: chunk auto-fits
+])
+def test_flash_attention_kernel_sweep(rng, b, s, h, d, causal, chunk):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    out = flash_attention_fwd(q, k, v, causal=causal, q_chunk=chunk,
+                              k_chunk=chunk, interpret=True)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_kernel_bf16(rng):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    b, s, h, d = 1, 64, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d))).astype(jnp.bfloat16)
+    out = flash_attention_fwd(q, k, v, causal=True, q_chunk=16, k_chunk=16,
+                              interpret=True)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) / (d ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), vf)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref), atol=0.06, rtol=0.06)

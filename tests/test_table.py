@@ -1,0 +1,179 @@
+"""Tables + relational ops vs Python oracles, incl. hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.table import Table, Schema, INT, FLOAT, STR, next_capacity
+from repro.core import relational as R
+
+
+def make(ids, scores, tags):
+    return Table.from_columns(
+        {"id": INT, "score": FLOAT, "tag": STR},
+        {"id": ids, "score": scores, "tag": tags})
+
+
+T0 = make([3, 1, 2, 5, 4], [0.5, 0.1, 0.9, 0.3, 0.7],
+          ["java", "py", "java", "c", "py"])
+
+
+def test_schema_validation():
+    with pytest.raises(ValueError):
+        Schema.of([("a", INT), ("a", FLOAT)])
+    with pytest.raises(ValueError):
+        Schema.of([("a", "bogus")])
+
+
+def test_capacity_bucketing():
+    assert next_capacity(0) == 8
+    assert next_capacity(8) == 8
+    assert next_capacity(9) == 16
+    assert next_capacity(1000) == 1024
+
+
+def test_select_eq_string():
+    s = R.select(T0, "tag", "==", "java")
+    d = s.to_pydict()
+    assert d["id"] == [3, 2] and d["tag"] == ["java", "java"]
+    assert d["score"] == pytest.approx([0.5, 0.9])
+    # select keeps the same capacity bucket (paper's "in place")
+    assert s.capacity == T0.capacity
+
+
+def test_select_cmp_numeric():
+    s = R.select(T0, "score", ">=", 0.5)
+    assert sorted(s.to_pydict()["id"]) == [2, 3, 4]
+    s2 = R.select(T0, "id", "!=", 3)
+    assert len(s2) == 4
+
+
+def test_select_missing_string_matches_nothing():
+    s = R.select(T0, "tag", "==", "rust")
+    assert len(s) == 0
+
+
+def test_order():
+    o = R.order(T0, ["score"])
+    assert o.to_pydict()["id"] == [1, 5, 3, 4, 2]
+    o2 = R.order(T0, ["tag", "score"])
+    assert o2.to_pydict()["tag"] == ["c", "java", "java", "py", "py"]
+
+
+def test_project_and_rename():
+    p = R.project(T0, ["tag", "id"])
+    assert p.schema.names == ("tag", "id")
+    r = p.renamed({"tag": "language"})
+    assert r.schema.names == ("language", "id")
+    assert r.strings("language")[0] == "java"
+
+
+def test_join_counts_and_values():
+    lt = Table.from_columns({"q": INT, "u": INT},
+                            {"q": [1, 2, 3, 3], "u": [10, 20, 30, 40]})
+    rt = Table.from_columns({"q": INT, "v": INT},
+                            {"q": [3, 3, 1], "v": [7, 8, 9]})
+    j = R.join(lt, rt, "q", "q")
+    got = sorted(zip(j.to_pydict()["u"], j.to_pydict()["v"]))
+    assert got == [(10, 9), (30, 7), (30, 8), (40, 7), (40, 8)]
+
+
+def test_join_string_keys_different_dicts():
+    lt = Table.from_columns({"k": STR, "x": INT},
+                            {"k": ["a", "b", "c"], "x": [1, 2, 3]})
+    rt = Table.from_columns({"k": STR, "y": INT},
+                            {"k": ["c", "a", "z"], "y": [30, 10, 99]})
+    j = R.join(lt, rt, "k", "k")
+    got = sorted(zip(j.to_pydict()["x"], j.to_pydict()["y"]))
+    assert got == [(1, 10), (3, 30)]
+
+
+def test_group_by():
+    g = R.group_by(T0, "tag", {"total": ("score", "sum"),
+                               "n": ("id", "count"),
+                               "hi": ("score", "max")})
+    d = g.to_pydict()
+    by = dict(zip(d["tag"], zip(d["total"], d["n"], d["hi"])))
+    assert by["java"][1] == 2 and abs(by["java"][0] - 1.4) < 1e-5
+    assert by["c"] == (pytest.approx(0.3), 1, pytest.approx(0.3))
+
+
+def test_set_ops():
+    lt = Table.from_columns({"k": INT}, {"k": [1, 2, 3, 4]})
+    rt = Table.from_columns({"k": INT}, {"k": [3, 4, 5]})
+    assert sorted(R.intersect(lt, rt, "k").to_pydict()["k"]) == [3, 4]
+    assert sorted(R.difference(lt, rt, "k").to_pydict()["k"]) == [1, 2]
+    u = R.union(lt, rt)
+    assert sorted(u.to_pydict()["k"]) == [1, 2, 3, 3, 4, 4, 5]
+
+
+def test_union_string_dictionary_merge():
+    lt = Table.from_columns({"k": STR}, {"k": ["a", "b"]})
+    rt = Table.from_columns({"k": STR}, {"k": ["b", "z"]})
+    u = R.union(lt, rt)
+    assert u.strings("k") == ["a", "b", "b", "z"]
+
+
+def test_sim_join_band():
+    lt = Table.from_columns({"x": FLOAT}, {"x": [0.0, 10.0]})
+    rt = Table.from_columns({"y": FLOAT}, {"y": [1.0, 2.5, 9.0, 50.0]})
+    sj = R.sim_join(lt, rt, "x", "y", threshold=2.0)
+    got = sorted(zip(sj.to_pydict()["x"], sj.to_pydict()["y"]))
+    assert got == [(0.0, 1.0), (10.0, 9.0)]
+
+
+def test_next_k_successors():
+    ev = Table.from_columns({"user": INT, "ts": INT},
+                            {"user": [1, 1, 1, 2, 2], "ts": [5, 1, 3, 2, 9]})
+    nk = R.next_k(ev, "user", "ts", k=1)
+    got = sorted(zip(nk.to_pydict()["ts_1"], nk.to_pydict()["ts_2"]))
+    assert got == [(1, 3), (2, 9), (3, 5)]
+
+
+def test_row_id_tracking_through_select():
+    s = R.select(T0, "tag", "==", "py")
+    # persistent row ids: original rows 1 and 4
+    assert sorted(np.asarray(s.row_ids[:len(s)]).tolist()) == [1, 4]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+ints = st.lists(st.integers(-50, 50), min_size=0, max_size=40)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints, st.integers(-50, 50))
+def test_prop_select_matches_python(xs, pivot):
+    t = Table.from_columns({"x": INT}, {"x": xs})
+    s = R.select(t, "x", "<", pivot)
+    assert sorted(s.to_pydict()["x"]) == sorted([v for v in xs if v < pivot])
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints, ints)
+def test_prop_join_cardinality(lxs, rxs):
+    lt = Table.from_columns({"k": INT}, {"k": lxs})
+    rt = Table.from_columns({"k": INT}, {"k": rxs})
+    j = R.join(lt, rt, "k", "k")
+    from collections import Counter
+    cl, cr = Counter(lxs), Counter(rxs)
+    assert len(j) == sum(cl[k] * cr[k] for k in cl)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints)
+def test_prop_order_is_sorted_permutation(xs):
+    t = Table.from_columns({"x": INT}, {"x": xs})
+    o = R.order(t, ["x"])
+    assert o.to_pydict()["x"] == sorted(xs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints)
+def test_prop_group_count_sums_to_n(xs):
+    t = Table.from_columns({"x": INT}, {"x": xs})
+    g = R.group_by(t, "x", {"n": ("x", "count")})
+    assert sum(g.to_pydict()["n"]) == len(xs)
+    assert g.to_pydict()["x"] == sorted(set(xs))
