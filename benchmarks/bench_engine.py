@@ -1,0 +1,85 @@
+"""Engine smoke benchmark — per-backend PageRank latency → BENCH_engine.json.
+
+Runs PageRank through the unified traversal engine on an RMAT graph (default
+2^16 nodes, the paper-table scale knob) once per backend and records wall
+time plus the one-off plan build cost, so the perf trajectory of the
+plan/engine substrate is tracked across PRs.
+
+The Pallas/BSR backends execute in interpret mode off-TPU, which is a
+correctness emulation, not a speed path — on non-TPU hosts they are measured
+at a reduced scale (recorded in the JSON) to keep the smoke run fast.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import algorithms as A
+from repro.core.graph import Graph
+from repro.data.rmat import rmat_edges
+
+
+def _sync_plan(plan):
+    jax.block_until_ready((plan.in_src, plan.in_dst, plan.out_src,
+                           plan.out_dst, plan.inv_out_deg))
+
+
+def bench_backend(backend: str, scale: int, edge_factor: int, n_iter: int,
+                  repeats: int) -> dict:
+    src, dst = rmat_edges(scale, edge_factor=edge_factor, seed=0)
+    # shape warm-up: an identically-shaped throwaway graph pays the
+    # per-shape op-compile cost, so plan_build_ms measures per-graph work
+    _sync_plan(Graph.from_edges(src, dst).plan())
+    g = Graph.from_edges(src, dst)
+    t0 = time.perf_counter()
+    plan = g.plan()
+    _sync_plan(plan)
+    plan_ms = (time.perf_counter() - t0) * 1e3
+    # warmup: jit compile + lazy plan structures (BSR tiles / chunk layouts)
+    A.pagerank(g, n_iter=n_iter, backend=backend).block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        A.pagerank(g, n_iter=n_iter, backend=backend).block_until_ready()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return {"scale": scale, "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+            "n_iter": n_iter, "plan_build_ms": round(plan_ms, 3),
+            "pagerank_ms": round(best, 3)}
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--scale", type=int, default=16,
+                   help="log2 nodes for the native backend run")
+    p.add_argument("--interp-scale", type=int, default=9,
+                   help="log2 nodes for interpret-mode backends off-TPU")
+    p.add_argument("--edge-factor", type=int, default=8)
+    p.add_argument("--n-iter", type=int, default=10)
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--out", default="BENCH_engine.json")
+    args = p.parse_args()
+
+    on_tpu = jax.default_backend() == "tpu"
+    scales = {"xla": args.scale,
+              "pallas": args.scale if on_tpu else args.interp_scale,
+              "bsr": args.scale if on_tpu else args.interp_scale}
+    results = {"device": jax.default_backend(), "backends": {}}
+    for backend, scale in scales.items():
+        r = bench_backend(backend, scale, args.edge_factor, args.n_iter,
+                          args.repeats)
+        r["interpret_mode"] = not on_tpu and backend != "xla"
+        results["backends"][backend] = r
+        print(f"{backend:7s} scale={scale:2d} plan={r['plan_build_ms']:9.2f}ms"
+              f" pagerank={r['pagerank_ms']:9.2f}ms"
+              f"{'  (interpret)' if r['interpret_mode'] else ''}")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Make-free tier-1 gate: full test suite + engine perf smoke.
+#
+#   benchmarks/ci_check.sh            # tests + benchmark -> BENCH_engine.json
+#   benchmarks/ci_check.sh --scale 12 # extra args forwarded to bench_engine
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python benchmarks/bench_engine.py --out BENCH_engine.json "$@"

@@ -1,12 +1,20 @@
-"""Graph algorithms (Ringo §2.2/§3, paper Tables 3 & 6).
+"""Graph algorithms (Ringo §2.2/§3, paper Tables 3 & 6) on the shared engine.
 
 The paper benchmarks PageRank and triangle counting (parallel, Table 3) and
 3-core / SSSP / SCC (sequential, Table 6), drawn from SNAP's 200+ algorithm
 library.  We implement the full set named in the paper plus the common
-supporting measures, as **vectorized fixed-point iterations**:
+supporting measures, as **vectorized fixed-point iterations** — but every
+one of them is now a thin composition over the two-layer execution
+substrate:
 
-    OpenMP parallel-for over nodes/edges  →  segment_sum/min/max over
-    CSR-sorted edge arrays + lax.while_loop until fixpoint.
+    Graph.plan()      (core/plan.py)   cached derived arrays, paid once
+    engine primitives (core/engine.py) pull/push/fixpoint with backend
+                                       dispatch: "xla" | "pallas" | "bsr"
+
+so repeated interactive calls on the same graph reuse the sorted edge
+arrays, and a backend speedup applies to the whole library at once.  Every
+algorithm accepts ``backend=`` (None = auto by device/size) and
+``interpret=`` (Pallas interpret-mode override) kwargs.
 
 Every algorithm works on dense node ids of a :class:`repro.core.graph.Graph`
 and returns per-node arrays (convertible back to tables via
@@ -15,13 +23,13 @@ and returns per-node arrays (convertible back to tables via
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import engine
 from .graph import Graph
 
 __all__ = [
@@ -42,42 +50,39 @@ __all__ = [
 _INF = jnp.float32(jnp.inf)
 
 
+def _exec_for(g: Graph, backend: Optional[str], interpret: Optional[bool]):
+    plan = g.plan()
+    return plan, engine.get_exec(plan, backend, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # PageRank (paper Table 3: 2.76 s LiveJournal / 60.5 s Twitter2010, 10 iters)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5))
-def _pagerank_kernel(src_by_dst, dst_of_edge, out_deg, dangling_mask,
-                     n_nodes: int, n_iter: int, damping: float = 0.85):
-    n = n_nodes
-    pr0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
-    inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1), 0.0)
-
-    def body(_, pr):
-        contrib = pr * inv_deg                       # mass per out-edge
-        gathered = contrib[src_by_dst]               # sorted by dst => fast
-        summed = jax.ops.segment_sum(gathered, dst_of_edge, num_segments=n,
-                                     indices_are_sorted=True)
-        dangling = jnp.sum(jnp.where(dangling_mask, pr, 0.0))
-        return (1.0 - damping) / n + damping * (summed + dangling / n)
-
-    return jax.lax.fori_loop(0, n_iter, body, pr0)
+def _pagerank_body(ex, pr, damping, inv_deg, dangling):
+    n = ex.n_nodes
+    summed = ex.pull(pr * inv_deg, "sum")        # rank mass along in-edges
+    dang = jnp.sum(jnp.where(dangling, pr, 0.0))
+    return (1.0 - damping) / n + damping * (summed + dang / n)
 
 
-def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85) -> jax.Array:
+def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85, *,
+             backend: Optional[str] = None,
+             interpret: Optional[bool] = None) -> jax.Array:
     """Power-iteration PageRank with dangling-mass redistribution.
 
-    The SpMV inner loop gathers rank along in-edges **sorted by destination**
-    (the sort-first layout), turning the paper's per-edge scatter into a
-    contiguous segmented reduction.  `kernels/bsr_spmv` provides the
-    MXU-tiled Pallas version of the same contraction.
+    The SpMV inner loop is ``engine.pull(pr * inv_deg, "sum")`` — on the
+    "bsr" backend that is the MXU-tiled BSR SpMV, on "pallas" the one-hot
+    matmul segment sum, on "xla" a sorted segmented reduction.
     """
-    src, dst = g.in_edges()
-    out_deg = g.out_degrees().astype(jnp.float32)
-    dangling = out_deg == 0
-    return _pagerank_kernel(src, dst, out_deg, dangling, g.n_nodes, n_iter,
-                            damping)
+    if g.n_nodes == 0:
+        return jnp.zeros((0,), jnp.float32)
+    plan, ex = _exec_for(g, backend, interpret)
+    pr0 = jnp.full((g.n_nodes,), 1.0 / g.n_nodes, dtype=jnp.float32)
+    return engine.fixpoint(ex, _pagerank_body, pr0, n_iter=n_iter,
+                           args=(jnp.float32(damping), plan.inv_out_deg,
+                                 plan.dangling))
 
 
 # ---------------------------------------------------------------------------
@@ -85,56 +90,48 @@ def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _oriented_neighbor_matrix(g: Graph) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Degeneracy-oriented padded adjacency.
-
-    Orient each undirected edge from its lower-(degree, id) endpoint to the
-    higher one; every triangle then has exactly one "apex" and is counted
-    once.  Max oriented out-degree is O(sqrt(E)) — this bounds the padded
-    matrix width, the TPU dual of the paper's per-node adjacency vectors.
-    """
-    src, dst = g.out_edges()  # undirected graph stores both directions
-    deg = g.out_degrees()
-    # orient by (degree, id) lexicographic rank
-    keep = (deg[src] < deg[dst]) | ((deg[src] == deg[dst]) & (src < dst))
-    n_keep = int(jnp.sum(keep))
-    perm = jnp.argsort(~keep, stable=True)[: max(n_keep, 1)]
-    osrc, odst = src[perm][:n_keep], dst[perm][:n_keep]
-    odeg = jnp.bincount(osrc, length=g.n_nodes)
-    max_deg = int(jnp.max(odeg)) if n_keep else 0
-    order_ = jnp.lexsort((odst, osrc))
-    s_sorted, d_sorted = osrc[order_], odst[order_]
-    ptr = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                           jnp.cumsum(odeg).astype(jnp.int32)])
-    # scatter into (n, max_deg) padded matrix; pad with n (sorts to the end)
-    slot = jnp.arange(n_keep, dtype=jnp.int32) - ptr[s_sorted]
-    nbr = jnp.full((g.n_nodes, max(max_deg, 1)), g.n_nodes, dtype=jnp.int32)
-    nbr = nbr.at[s_sorted, slot].set(d_sorted)
-    return osrc, odst, nbr, odeg.astype(jnp.int32)
+def _triangle_hits(plan, lo: int, hi: int):
+    """Per-edge sorted-adjacency intersection over one oriented-edge chunk."""
+    osrc, odst, nbr, _ = plan.oriented()
+    pad_val = plan.n_nodes
+    u, v = osrc[lo:hi], odst[lo:hi]
+    cand = nbr[u]                                  # (c, w)
+    rows = nbr[v]                                  # (c, w)
+    pos = jnp.clip(jax.vmap(jnp.searchsorted)(rows, cand), 0, rows.shape[1] - 1)
+    return u, v, cand, (jnp.take_along_axis(rows, pos, axis=1) == cand) \
+        & (cand != pad_val)
 
 
-def triangle_count(g: Graph, edge_chunk: int = 1 << 16) -> int:
+def triangle_count(g: Graph, edge_chunk: int = 1 << 16, *,
+                   backend: Optional[str] = None,
+                   interpret: Optional[bool] = None) -> int:
     """Exact triangle count of the undirected simple graph ``g``.
 
-    Degeneracy orientation + per-edge sorted-adjacency intersection
-    (binary search), chunked over edges to bound memory.  The Pallas
-    `bsr_tricount` kernel computes the same quantity as Σ A∘(A·A)/6 on
-    128×128 MXU tiles (see kernels/).
+    Default path: degeneracy orientation (cached in the plan) + per-edge
+    sorted-adjacency intersection, chunked over edges to bound memory.
+    ``backend="bsr"`` dispatches to the A∘(A·A) MXU kernel over the plan's
+    cached 128×128 tiles and block triples (kernels/bsr_tricount.py).
     """
+    if backend not in (None, "xla", "bsr"):
+        raise ValueError(f"triangle_count backends are None/'xla' (oriented "
+                         f"intersection) or 'bsr' (MXU kernel); got {backend!r}")
     if g.n_edges == 0 or g.n_nodes == 0:
         return 0
-    osrc, odst, nbr, odeg = _oriented_neighbor_matrix(g)
+    plan = g.plan()
+    if backend == "bsr":
+        from ..kernels.bsr_tricount import bsr_tricount
+        from ..kernels.ops import auto_interpret
+        tiles, _, _, _ = plan.bsr()
+        t_ij, t_ik, t_kj = plan.tri_triples()
+        six_t = bsr_tricount(jnp.minimum(tiles, 1.0), t_ij, t_ik, t_kj,
+                             interpret=auto_interpret(interpret))
+        return int(round(float(six_t) / 6.0))
+    osrc, _, _, _ = plan.oriented()
     e = int(osrc.shape[0])
-    n = g.n_nodes
     total = 0
-    pad_val = n  # padding neighbor id
     for lo in range(0, e, edge_chunk):
         hi = min(lo + edge_chunk, e)
-        u, v = osrc[lo:hi], odst[lo:hi]
-        cand = nbr[u]                                  # (c, w)
-        rows = nbr[v]                                  # (c, w)
-        pos = jnp.clip(jax.vmap(jnp.searchsorted)(rows, cand), 0, rows.shape[1] - 1)
-        hit = (jnp.take_along_axis(rows, pos, axis=1) == cand) & (cand != pad_val)
+        _, _, _, hit = _triangle_hits(plan, lo, hi)
         total += int(jnp.sum(hit))
     return total
 
@@ -143,31 +140,28 @@ def per_node_triangles(g: Graph, edge_chunk: int = 1 << 16) -> jax.Array:
     """Triangles incident to each node (undirected simple graph)."""
     if g.n_edges == 0 or g.n_nodes == 0:
         return jnp.zeros((max(g.n_nodes, 1),), jnp.int32)[: g.n_nodes]
-    osrc, odst, nbr, _ = _oriented_neighbor_matrix(g)
+    plan = g.plan()
+    osrc, _, _, _ = plan.oriented()
     e = int(osrc.shape[0])
     n = g.n_nodes
-    pad_val = n
     counts = jnp.zeros((n,), jnp.int32)
     for lo in range(0, e, edge_chunk):
         hi = min(lo + edge_chunk, e)
-        u, v = osrc[lo:hi], odst[lo:hi]
-        cand = nbr[u]
-        rows = nbr[v]
-        pos = jnp.clip(jax.vmap(jnp.searchsorted)(rows, cand), 0, rows.shape[1] - 1)
-        hit = (jnp.take_along_axis(rows, pos, axis=1) == cand) & (cand != pad_val)
+        u, v, cand, hit = _triangle_hits(plan, lo, hi)
         per_edge = jnp.sum(hit, axis=1).astype(jnp.int32)        # apex count
         counts = counts.at[u].add(per_edge)
         counts = counts.at[v].add(per_edge)
         # the third vertex w of each triangle:
         w_hits = jnp.where(hit, cand, n)
-        counts = counts + jnp.bincount(w_hits.reshape(-1), length=n + 1)[:n].astype(jnp.int32)
+        counts = counts + jnp.bincount(w_hits.reshape(-1),
+                                       length=n + 1)[:n].astype(jnp.int32)
     return counts
 
 
 def clustering_coefficient(g: Graph) -> jax.Array:
     """Local clustering coefficient per node (undirected simple graph)."""
     tri = per_node_triangles(g).astype(jnp.float32)
-    deg = g.out_degrees().astype(jnp.float32)
+    deg = g.plan().out_deg.astype(jnp.float32)
     wedges = deg * (deg - 1.0) / 2.0
     return jnp.where(wedges > 0, tri / jnp.maximum(wedges, 1.0), 0.0)
 
@@ -177,34 +171,23 @@ def clustering_coefficient(g: Graph) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _cc_kernel(src, dst, n_nodes: int):
-    labels0 = jnp.arange(n_nodes, dtype=jnp.int32)
-
-    def cond(state):
-        labels, changed = state
-        return changed
-
-    def body(state):
-        labels, _ = state
-        # min label over in-neighbors (graph is symmetrized by caller)
-        m = jax.ops.segment_min(labels[src], dst, num_segments=n_nodes,
-                                indices_are_sorted=True)
-        new = jnp.minimum(labels, m)
-        # pointer jumping: label <- label[label] until stable this round
-        new = new[new]
-        new = new[new]
-        return new, jnp.any(new != labels)
-
-    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
-    return labels
+def _cc_body(ex, labels):
+    # min label over in-neighbors (undirected view is symmetrized)
+    m = ex.pull(labels, "min")
+    new = jnp.minimum(labels, m)
+    # pointer jumping: label <- label[label] until stable this round
+    new = new[new]
+    new = new[new]
+    return new
 
 
-def connected_components(g: Graph) -> jax.Array:
+def connected_components(g: Graph, *, backend: Optional[str] = None,
+                         interpret: Optional[bool] = None) -> jax.Array:
     """Weakly-connected component labels (min node id in component)."""
-    u = g.to_undirected()
-    src, dst = u.in_edges()
-    labels = _cc_kernel(src, dst, u.n_nodes)
+    u = g.plan().undirected()
+    _, ex = _exec_for(u, backend, interpret)
+    labels0 = jnp.arange(u.n_nodes, dtype=jnp.int32)
+    labels = engine.fixpoint(ex, _cc_body, labels0)
     # map back to g's dense id space (same original ids, maybe different order)
     return labels[u.dense_of(g.node_ids[: g.n_nodes])]
 
@@ -214,41 +197,39 @@ def connected_components(g: Graph) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _bellman_ford(src, dst, w, n_nodes: int, source):
-    dist0 = jnp.full((n_nodes,), _INF).at[source].set(0.0)
-
-    def cond(state):
-        dist, changed = state
-        return changed
-
-    def body(state):
-        dist, _ = state
-        relaxed = jax.ops.segment_min(dist[src] + w, dst, num_segments=n_nodes,
-                                      indices_are_sorted=True)
-        new = jnp.minimum(dist, relaxed)
-        return new, jnp.any(new < dist)
-
-    dist, _ = jax.lax.while_loop(cond, body, (dist0, jnp.bool_(True)))
-    return dist
+def _sssp_body(ex, dist, w):
+    relaxed = ex.pull(dist, "min", edge_values=w, edge_op="add")
+    return jnp.minimum(dist, relaxed)
 
 
-def sssp(g: Graph, source: int, weights: Optional[jax.Array] = None) -> jax.Array:
-    """Single-source shortest paths (Bellman-Ford over in-edge segments).
+def sssp(g: Graph, source, weights: Optional[jax.Array] = None, *,
+         backend: Optional[str] = None,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """Single- or multi-source shortest paths (Bellman-Ford relaxation).
 
     ``weights`` is per-edge in in-edge order (sorted by dst); defaults to 1.
-    Vectorized frontier relaxation — the data-parallel dual of SNAP's
-    sequential Dijkstra benchmarked in Table 6.
+    ``source`` may be a scalar (returns ``(n,)``) or an array of k sources
+    (returns ``(k, n)`` — batched via ``vmap`` over the engine fixpoint, the
+    data-parallel dual of SNAP's sequential Dijkstra from Table 6).
     """
-    src, dst = g.in_edges()
-    w = jnp.ones((src.shape[0],), jnp.float32) if weights is None \
+    _, ex = _exec_for(g, backend, interpret)
+    w = jnp.ones((g.n_edges,), jnp.float32) if weights is None \
         else weights.astype(jnp.float32)
-    return _bellman_ford(src, dst, w, g.n_nodes, jnp.int32(source))
+    scalar = np.ndim(source) == 0
+    sources = jnp.atleast_1d(jnp.asarray(source, dtype=jnp.int32))
+
+    def one(s):
+        dist0 = jnp.full((g.n_nodes,), _INF).at[s].set(0.0)
+        return engine.fixpoint(ex, _sssp_body, dist0, args=(w,))
+
+    dists = jax.vmap(one)(sources)
+    return dists[0] if scalar else dists
 
 
-def bfs(g: Graph, source: int) -> jax.Array:
-    """BFS levels (unweighted SSSP); -1 for unreachable."""
-    dist = sssp(g, source)
+def bfs(g: Graph, source, *, backend: Optional[str] = None,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """BFS levels (unweighted SSSP); -1 for unreachable.  Batched like sssp."""
+    dist = sssp(g, source, backend=backend, interpret=interpret)
     return jnp.where(jnp.isinf(dist), -1, dist.astype(jnp.int32))
 
 
@@ -257,44 +238,40 @@ def bfs(g: Graph, source: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _k_core_kernel(src, dst, n_nodes: int, k: int):
-    alive0 = jnp.ones((n_nodes,), bool)
-
-    def cond(state):
-        alive, changed = state
-        return changed
-
-    def body(state):
-        alive, _ = state
-        # degree counting only edges between alive nodes
-        live_edge = alive[src] & alive[dst]
-        deg = jax.ops.segment_sum(live_edge.astype(jnp.int32), dst,
-                                  num_segments=n_nodes, indices_are_sorted=True)
-        new = alive & (deg >= k)
-        return new, jnp.any(new != alive)
-
-    alive, _ = jax.lax.while_loop(cond, body, (alive0, jnp.bool_(True)))
-    return alive
+def _k_core_body(ex, alive, k):
+    # degree over alive neighbors; edges into dead nodes only affect rows
+    # that the alive & ... mask kills anyway, so no dst-side mask is needed
+    deg = ex.pull(alive.astype(jnp.float32), "sum")
+    return alive & (deg >= k)
 
 
-def k_core(g: Graph, k: int) -> jax.Array:
+def k_core(g: Graph, k: int, *, backend: Optional[str] = None,
+           interpret: Optional[bool] = None) -> jax.Array:
     """Boolean mask of nodes in the k-core (iterative parallel peeling)."""
-    u = g.to_undirected()
-    src, dst = u.in_edges()
-    alive = _k_core_kernel(src, dst, u.n_nodes, int(k))
+    u = g.plan().undirected()
+    _, ex = _exec_for(u, backend, interpret)
+    alive = engine.fixpoint(ex, _k_core_body, jnp.ones((u.n_nodes,), bool),
+                            args=(jnp.float32(k),))
     return alive[u.dense_of(g.node_ids[: g.n_nodes])]
 
 
-def core_numbers(g: Graph, k_max: Optional[int] = None) -> jax.Array:
-    """Core number per node by sweeping k (exact; O(k_max) peels)."""
-    u = g.to_undirected()
-    src, dst = u.in_edges()
+def core_numbers(g: Graph, k_max: Optional[int] = None, *,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Core number per node by sweeping k (exact; O(k_max) peels).
+
+    All peels share one plan/exec — the sweep reuses the cached undirected
+    view and sorted edge arrays across every k.
+    """
+    u = g.plan().undirected()
+    _, ex = _exec_for(u, backend, interpret)
     if k_max is None:
-        k_max = int(jnp.max(u.out_degrees())) if u.n_nodes else 0
+        k_max = int(jnp.max(u.plan().out_deg)) if u.n_nodes else 0
     core = jnp.zeros((u.n_nodes,), jnp.int32)
     for k in range(1, k_max + 1):
-        alive = _k_core_kernel(src, dst, u.n_nodes, k)
+        alive = engine.fixpoint(ex, _k_core_body,
+                                jnp.ones((u.n_nodes,), bool),
+                                args=(jnp.float32(k),))
         if not bool(jnp.any(alive)):
             break
         core = jnp.where(alive, k, core)
@@ -305,81 +282,54 @@ def core_numbers(g: Graph, k_max: Optional[int] = None) -> jax.Array:
 # SCC (paper Table 6: 18 s sequential) — parallel coloring (Orzan) algorithm
 # ---------------------------------------------------------------------------
 
+_NOT_ASSIGNED = jnp.int32(-1)
 
-@functools.partial(jax.jit, static_argnums=(4,))
-def _scc_kernel(fsrc, fdst, bsrc, bdst, n_nodes: int):
-    """Forward-max coloring + backward containment, vectorized.
 
-    repeat until every node assigned:
-      1. color = max node id, propagated along *forward* edges among
-         unassigned nodes, to fixpoint.
-      2. nodes with color == own id are SCC roots.
-      3. propagate "reached" backward from each root, restricted to nodes of
-         the same color: those reached form the root's SCC.
+def _scc_color_body(ex, color, un):
+    # propagate color along forward edges: dst takes max(src color)
+    m = ex.pull(jnp.where(un, color, _NOT_ASSIGNED), "max")
+    return jnp.where(un, jnp.maximum(color, m), color)
+
+
+def _scc_reach_body(ex, reach, un, color):
+    # backward edge (u->v in G) propagates reach v->u, restricted to
+    # unassigned endpoints of equal color: reduce out-edges to their source
+    ok = (ex.out_src_vals(un) & ex.out_dst_vals(un)
+          & (ex.out_src_vals(color) == ex.out_dst_vals(color)))
+    ev = jnp.where(ok, ex.out_dst_vals(reach), False)
+    m = ex.reduce_out(ev.astype(jnp.int32), "max")
+    return reach | (m > 0)
+
+
+def _scc_round(ex, scc):
+    """Forward-max coloring + backward containment, one assignment round.
+
+    1. color = max node id, propagated along *forward* edges among
+       unassigned nodes, to fixpoint.
+    2. nodes with color == own id are SCC roots.
+    3. propagate "reached" backward from each root, restricted to nodes of
+       the same color: those reached form the root's SCC.
     """
-    NOT_ASSIGNED = jnp.int32(-1)
-    scc0 = jnp.full((n_nodes,), NOT_ASSIGNED)
-
-    def any_unassigned(state):
-        scc, = state
-        return jnp.any(scc == NOT_ASSIGNED)
-
-    def round_(state):
-        scc, = state
-        un = scc == NOT_ASSIGNED
-
-        # --- forward max-coloring to fixpoint
-        color0 = jnp.where(un, jnp.arange(n_nodes, dtype=jnp.int32), NOT_ASSIGNED)
-
-        def c_cond(cs):
-            color, changed = cs
-            return changed
-
-        def c_body(cs):
-            color, _ = cs
-            # propagate color along forward edges: dst takes max(src color)
-            src_col = jnp.where(un[fsrc] & un[fdst], color[fsrc], NOT_ASSIGNED)
-            m = jax.ops.segment_max(src_col, fdst, num_segments=n_nodes,
-                                    indices_are_sorted=True)
-            new = jnp.where(un, jnp.maximum(color, m), color)
-            return new, jnp.any(new != color)
-
-        color, _ = jax.lax.while_loop(c_cond, c_body, (color0, jnp.bool_(True)))
-
-        # --- backward reachability within color
-        is_root = un & (color == jnp.arange(n_nodes, dtype=jnp.int32))
-        reach0 = is_root
-
-        def r_cond(rs):
-            reach, changed = rs
-            return changed
-
-        def r_body(rs):
-            reach, _ = rs
-            # backward edge (u->v in G) becomes v->u; propagate reach from dst to src
-            ok = un[bsrc] & un[bdst] & (color[bsrc] == color[bdst])
-            src_reach = jnp.where(ok, reach[bsrc], False)
-            m = jax.ops.segment_max(src_reach.astype(jnp.int32), bdst,
-                                    num_segments=n_nodes, indices_are_sorted=True)
-            new = reach | (m > 0)
-            return new, jnp.any(new != reach)
-
-        reach, _ = jax.lax.while_loop(r_cond, r_body, (reach0, jnp.bool_(True)))
-        scc_new = jnp.where(un & reach, color, scc)
-        return (scc_new,)
-
-    (scc,) = jax.lax.while_loop(any_unassigned, round_, (scc0,))
-    return scc
+    n = ex.n_nodes
+    un = scc == _NOT_ASSIGNED
+    color0 = jnp.where(un, jnp.arange(n, dtype=jnp.int32), _NOT_ASSIGNED)
+    color = engine.fixpoint(ex, _scc_color_body, color0, args=(un,))
+    is_root = un & (color == jnp.arange(n, dtype=jnp.int32))
+    reach = engine.fixpoint(ex, _scc_reach_body, is_root, args=(un, color))
+    return jnp.where(un & reach, color, scc)
 
 
-def strongly_connected_components(g: Graph) -> jax.Array:
+def strongly_connected_components(g: Graph, *,
+                                  backend: Optional[str] = None,
+                                  interpret: Optional[bool] = None
+                                  ) -> jax.Array:
     """SCC id per node (id = max dense node id in the component)."""
-    fsrc, fdst = g.in_edges()          # forward edges grouped by dst
-    bdst_src, bdst_dst = g.out_edges()  # src->dst sorted by src
-    # backward propagation goes dst->src: treat (dst as source of reach, src as target)
-    # regroup by "target" = src: out_edges is sorted by src already.
-    bsrc, bdst = bdst_dst, bdst_src
-    return _scc_kernel(fsrc, fdst, bsrc, bdst, g.n_nodes)
+    _, ex = _exec_for(g, backend, interpret)
+    scc0 = jnp.full((g.n_nodes,), _NOT_ASSIGNED)
+    # each round assigns at least the max unassigned id's component, so the
+    # state strictly changes until everything is assigned — the generic
+    # until-unchanged driver terminates one round after full assignment
+    return engine.fixpoint(ex, _scc_round, scc0)
 
 
 # ---------------------------------------------------------------------------
@@ -387,29 +337,21 @@ def strongly_connected_components(g: Graph) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5))
-def _hits_kernel(isrc, idst, osrc, odst, n_nodes: int, n_iter: int):
-    hub = jnp.ones((n_nodes,), jnp.float32)
-    auth = jnp.ones((n_nodes,), jnp.float32)
-
-    def body(_, ha):
-        hub, auth = ha
-        auth = jax.ops.segment_sum(hub[isrc], idst, num_segments=n_nodes,
-                                   indices_are_sorted=True)
-        auth = auth / jnp.maximum(jnp.linalg.norm(auth), 1e-30)
-        hub = jax.ops.segment_sum(auth[odst], osrc, num_segments=n_nodes,
-                                  indices_are_sorted=True)
-        hub = hub / jnp.maximum(jnp.linalg.norm(hub), 1e-30)
-        return hub, auth
-
-    return jax.lax.fori_loop(0, n_iter, body, (hub, auth))
+def _hits_body(ex, ha):
+    hub, auth = ha
+    auth = ex.pull(hub, "sum")
+    auth = auth / jnp.maximum(jnp.linalg.norm(auth), 1e-30)
+    hub = ex.push(auth, "sum")
+    hub = hub / jnp.maximum(jnp.linalg.norm(hub), 1e-30)
+    return hub, auth
 
 
-def hits(g: Graph, n_iter: int = 20) -> Tuple[jax.Array, jax.Array]:
+def hits(g: Graph, n_iter: int = 20, *, backend: Optional[str] = None,
+         interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """HITS hub/authority scores (paper §4.1 mentions Hits for experts)."""
-    isrc, idst = g.in_edges()
-    osrc, odst = g.out_edges()
-    return _hits_kernel(isrc, idst, osrc, odst, g.n_nodes, n_iter)
+    _, ex = _exec_for(g, backend, interpret)
+    ones = jnp.ones((g.n_nodes,), jnp.float32)
+    return engine.fixpoint(ex, _hits_body, (ones, ones), n_iter=n_iter)
 
 
 # ---------------------------------------------------------------------------
@@ -418,7 +360,8 @@ def hits(g: Graph, n_iter: int = 20) -> Tuple[jax.Array, jax.Array]:
 
 
 def degree_histogram(g: Graph, direction: str = "out") -> jax.Array:
-    deg = g.out_degrees() if direction == "out" else g.in_degrees()
+    plan = g.plan()
+    deg = plan.out_deg if direction == "out" else plan.in_deg
     mx = int(jnp.max(deg)) if g.n_nodes else 0
     return jnp.bincount(deg, length=mx + 1)
 
@@ -428,74 +371,60 @@ def degree_histogram(g: Graph, direction: str = "out") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _eigen_kernel(src, dst, n_nodes: int, n_iter: int):
-    x = jnp.full((n_nodes,), 1.0 / jnp.sqrt(n_nodes), jnp.float32)
-
-    def body(_, v):
-        nv = jax.ops.segment_sum(v[src], dst, num_segments=n_nodes,
-                                 indices_are_sorted=True)
-        nv = nv + 0.01 * v   # regularizer: convergence on DAG-like graphs
-        return nv / jnp.maximum(jnp.linalg.norm(nv), 1e-30)
-
-    return jax.lax.fori_loop(0, n_iter, body, x)
+def _eigen_body(ex, v):
+    nv = ex.pull(v, "sum")
+    nv = nv + 0.01 * v   # regularizer: convergence on DAG-like graphs
+    return nv / jnp.maximum(jnp.linalg.norm(nv), 1e-30)
 
 
-def eigenvector_centrality(g: Graph, n_iter: int = 50) -> jax.Array:
+def eigenvector_centrality(g: Graph, n_iter: int = 50, *,
+                           backend: Optional[str] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
     """Power-iteration eigenvector centrality over in-edges."""
-    src, dst = g.in_edges()
-    return _eigen_kernel(src, dst, g.n_nodes, n_iter)
+    _, ex = _exec_for(g, backend, interpret)
+    x0 = jnp.full((g.n_nodes,), 1.0 / jnp.sqrt(g.n_nodes), jnp.float32)
+    return engine.fixpoint(ex, _eigen_body, x0, n_iter=n_iter)
 
 
 def degree_centrality(g: Graph, direction: str = "out") -> jax.Array:
-    deg = g.out_degrees() if direction == "out" else g.in_degrees()
+    plan = g.plan()
+    deg = plan.out_deg if direction == "out" else plan.in_deg
     return deg.astype(jnp.float32) / jnp.maximum(g.n_nodes - 1, 1)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _lp_kernel(src, dst, n_nodes: int, n_iter: int):
-    """Synchronous label propagation: adopt the min label among the
-    most-frequent neighbor labels (deterministic tie-break)."""
-    labels = jnp.arange(n_nodes, dtype=jnp.int32)
+def _lp_body(ex, lab):
+    """Hash-min label propagation step (min-of-mode relaxation).
 
-    def body(_, lab):
-        # score a label by (count via weighted vote, tie-break by min id):
-        # approximate the count with a sum of 1/(1+label) perturbations is
-        # unstable; use two passes — count votes per (dst, label) via sort
-        # is data-dependent.  We use the common min-of-mode relaxation:
-        # propagate min label among neighbors with the current max count
-        # approximated by a hash-min sweep (converges to communities on
-        # modular graphs; exact CC on disconnected ones).
-        m = jax.ops.segment_min(lab[src], dst, num_segments=n_nodes,
-                                indices_are_sorted=True)
-        return jnp.minimum(lab, m)
-
-    return jax.lax.fori_loop(0, n_iter, body, labels)
+    Converges to communities on modular graphs; exact CC on disconnected
+    ones — the deterministic tie-break variant of synchronous LP.
+    """
+    m = ex.pull(lab, "min")
+    return jnp.minimum(lab, m)
 
 
-def label_propagation(g: Graph, n_iter: int = 20) -> jax.Array:
+def label_propagation(g: Graph, n_iter: int = 20, *,
+                      backend: Optional[str] = None,
+                      interpret: Optional[bool] = None) -> jax.Array:
     """Community labels by (min-)label propagation on the undirected view."""
-    u = g.to_undirected()
-    src, dst = u.in_edges()
-    lab = _lp_kernel(src, dst, u.n_nodes, n_iter)
+    u = g.plan().undirected()
+    _, ex = _exec_for(u, backend, interpret)
+    lab = engine.fixpoint(ex, _lp_body,
+                          jnp.arange(u.n_nodes, dtype=jnp.int32),
+                          n_iter=n_iter)
     return lab[u.dense_of(g.node_ids[: g.n_nodes])]
 
 
 def closeness_centrality(g: Graph, sources: Optional[jax.Array] = None,
-                         n_samples: int = 16) -> jax.Array:
+                         n_samples: int = 16, *,
+                         backend: Optional[str] = None,
+                         interpret: Optional[bool] = None) -> jax.Array:
     """Sampled closeness: average reciprocal distance over sampled sources
-    (exact if sources covers all nodes).  Batched Bellman-Ford."""
+    (exact if sources covers all nodes).  Batched multi-source sssp."""
     n = g.n_nodes
     if sources is None:
         step = max(n // max(n_samples, 1), 1)
         sources = jnp.arange(0, n, step, dtype=jnp.int32)[: n_samples]
-    src, dst = g.in_edges()
-    w = jnp.ones((src.shape[0],), jnp.float32)
-
-    def one(s):
-        return _bellman_ford(src, dst, w, n, s)
-
-    dists = jax.vmap(one)(sources)                      # (k, n)
+    dists = sssp(g, sources, backend=backend, interpret=interpret)    # (k, n)
     finite = jnp.isfinite(dists)
     recip = jnp.where(finite & (dists > 0), 1.0 / jnp.maximum(dists, 1e-9), 0.0)
     return jnp.sum(recip, axis=0) / jnp.maximum(jnp.sum(finite, axis=0), 1)

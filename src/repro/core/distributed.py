@@ -278,11 +278,9 @@ def triangle_count_distributed(g: Graph, mesh: Mesh, axis: str = "gp",
     N·√E, acceptable through the low hundreds of millions of edges; beyond
     that the BSR kernel path shards tiles instead (see DESIGN.md).
     """
-    from .algorithms import _oriented_neighbor_matrix
-
     if g.n_edges == 0:
         return 0
-    osrc, odst, nbr, _ = _oriented_neighbor_matrix(g)
+    osrc, odst, nbr, _ = g.plan().oriented()
     d = mesh.shape[axis]
     e = int(osrc.shape[0])
     per = -(-e // d)
@@ -319,7 +317,9 @@ def triangle_count_distributed(g: Graph, mesh: Mesh, axis: str = "gp",
             return acc + jnp.sum(hit, dtype=jnp.int32)
 
         n_chunks = u.shape[0] // edge_chunk   # exact by construction
-        init = jax.lax.pvary(jnp.int32(0), (axis,))   # device-varying carry
+        init = jnp.int32(0)                   # device-varying carry
+        if hasattr(jax.lax, "pvary"):         # required once jax >= 0.6
+            init = jax.lax.pvary(init, (axis,))
         total = jax.lax.fori_loop(0, n_chunks, chunk_body, init)
         return jax.lax.psum(total, axis)
 

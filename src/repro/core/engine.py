@@ -1,0 +1,381 @@
+"""Layer 2 of the unified traversal engine: backend-dispatched push/pull.
+
+Architecture map (Ringo §2.2: one shared in-memory representation serving a
+whole algorithm library):
+
+    core/graph.py       Graph         static-shape dual-CSR storage
+        |  .plan()  (identity-memoized; functional updates -> fresh Graph)
+        v
+    core/plan.py        GraphPlan     cached derived arrays: dst-/src-sorted
+        |                             edges, degrees, oriented adjacency,
+        |                             BSR tiles, Pallas chunk layouts
+        v
+    core/engine.py      Exec          gather + segment-reduce primitives
+        |   push / pull / fixpoint    with *backend dispatch*:
+        |                               "xla"    jax.ops.segment_{sum,min,max}
+        |                               "pallas" kernels/segment_sum one-hot
+        |                                        matmul (sum reductions)
+        |                               "bsr"    kernels/bsr_spmv MXU SpMV
+        v                                        (fused gather+sum pulls)
+    core/algorithms.py  pagerank, hits, eigenvector_centrality, CC, SCC,
+                        sssp/bfs (batched multi-source), k-core, label
+                        propagation, triangles — thin compositions over the
+                        engine, so a backend speedup applies to all of them.
+
+Primitives (all methods of an ``Exec`` pytree, usable inside jit):
+
+    pull(x, combine)        per-node reduce over in-edges of x[src]
+    push(x, combine)        per-node reduce over out-edges of x[dst]
+    in_src_vals / in_dst_vals / out_src_vals / out_dst_vals
+                            edge-order gathers (pull order / push order)
+    reduce_in / reduce_out  the bare segmented reductions
+
+``fixpoint`` drives iteration: a fixed number of rounds (``n_iter``) or
+until the state stops changing.  Bodies must be module-level functions
+(the jitted runner is cached per body); per-call parameters go through
+``args`` so they are traced, not baked into the compile cache.
+
+Backends that cannot serve a request (min/max or integer sums on "pallas",
+weighted, batched or integer pulls on "bsr") transparently fall back to the
+XLA primitives, so backend choice never changes semantics — only speed.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.bsr_spmv import bsr_spmv
+from ..kernels.ops import auto_interpret
+from ..kernels.segment_sum import (DEFAULT_BLOCK, DEFAULT_CHUNK,
+                                   segment_sum_chunked)
+
+__all__ = ["BACKENDS", "select_backend", "get_exec", "push", "pull",
+           "fixpoint", "XlaExec", "PallasExec", "BsrExec"]
+
+BACKENDS = ("xla", "pallas", "bsr")
+
+# Auto-selection thresholds: below them the re-blocked kernels cannot beat
+# plain segment reductions (tile/chunk padding dominates).
+_PALLAS_MIN_EDGES = 1 << 16
+_BSR_MAX_NODES = 1 << 14  # tiles are dense 128x128: only small/dense graphs
+
+_REDUCERS = {
+    "sum": jax.ops.segment_sum,
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+}
+
+
+def select_backend(plan, backend: Optional[str] = None) -> str:
+    """Resolve the backend: per-call override > env var > device/size auto."""
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+        return backend
+    env = os.environ.get("REPRO_ENGINE_BACKEND")
+    if env:
+        return select_backend(plan, env)
+    if jax.default_backend() == "tpu":
+        if plan.n_nodes <= _BSR_MAX_NODES and plan.n_edges >= _PALLAS_MIN_EDGES:
+            return "bsr"
+        if plan.n_edges >= _PALLAS_MIN_EDGES:
+            return "pallas"
+    return "xla"
+
+
+# ---------------------------------------------------------------------------
+# Exec pytrees — one per backend
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class XlaExec:
+    """Traversal primitives over plan arrays; XLA segment reductions."""
+
+    n_nodes: int
+    n_edges: int
+    in_src: jax.Array    # in-edge order = sorted by dst (pull order)
+    in_dst: jax.Array
+    out_src: jax.Array   # out-edge order = sorted by src (push order)
+    out_dst: jax.Array
+
+    def tree_flatten(self):
+        return ((self.in_src, self.in_dst, self.out_src, self.out_dst),
+                (self.n_nodes, self.n_edges))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux, *leaves)
+
+    # -- edge-order gathers -----------------------------------------------------
+    def in_src_vals(self, x: jax.Array) -> jax.Array:
+        return x[self.in_src]
+
+    def in_dst_vals(self, x: jax.Array) -> jax.Array:
+        return x[self.in_dst]
+
+    def out_src_vals(self, x: jax.Array) -> jax.Array:
+        return x[self.out_src]
+
+    def out_dst_vals(self, x: jax.Array) -> jax.Array:
+        return x[self.out_dst]
+
+    # -- segmented reductions ---------------------------------------------------
+    def reduce_in(self, edge_vals: jax.Array, combine: str = "sum") -> jax.Array:
+        """Per-destination reduction of in-edge-order values (sorted ids)."""
+        return _REDUCERS[combine](edge_vals, self.in_dst,
+                                  num_segments=self.n_nodes,
+                                  indices_are_sorted=True)
+
+    def reduce_out(self, edge_vals: jax.Array, combine: str = "sum") -> jax.Array:
+        """Per-source reduction of out-edge-order values (sorted ids)."""
+        return _REDUCERS[combine](edge_vals, self.out_src,
+                                  num_segments=self.n_nodes,
+                                  indices_are_sorted=True)
+
+    # -- fused traversal primitives ---------------------------------------------
+    def pull(self, x: jax.Array, combine: str = "sum",
+             edge_values: Optional[jax.Array] = None,
+             edge_op: str = "mul") -> jax.Array:
+        """out[v] = combine over in-edges (u -> v) of x[u] (o edge_values)."""
+        ev = self.in_src_vals(x)
+        if edge_values is not None:
+            ev = ev * edge_values if edge_op == "mul" else ev + edge_values
+        return self.reduce_in(ev, combine)
+
+    def push(self, x: jax.Array, combine: str = "sum",
+             edge_values: Optional[jax.Array] = None,
+             edge_op: str = "mul") -> jax.Array:
+        """out[u] = combine over out-edges (u -> v) of x[v] (o edge_values)."""
+        ev = self.out_dst_vals(x)
+        if edge_values is not None:
+            ev = ev * edge_values if edge_op == "mul" else ev + edge_values
+        return self.reduce_out(ev, combine)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class PallasExec(XlaExec):
+    """Sum reductions via the one-hot-matmul Pallas kernel.
+
+    The chunk *structure* (which edge lands in which chunk/slot) is static
+    per graph and comes precomputed from the plan; each reduction only
+    scatters fresh values into the (C, L) chunk buffer on device.  min/max
+    and batched reductions fall back to the XLA primitives.
+    """
+
+    p_chunk: jax.Array = None   # pull layout: (E,) chunk of edge
+    p_slot: jax.Array = None    # (E,) slot within chunk
+    p_lids: jax.Array = None    # (C, L) local ids, pad = 128
+    p_blk: jax.Array = None     # (C,) owning output block
+    q_chunk: jax.Array = None   # push layout (over out_src)
+    q_slot: jax.Array = None
+    q_lids: jax.Array = None
+    q_blk: jax.Array = None
+    nb_in: int = 0
+    nb_out: int = 0
+    interpret: bool = True
+
+    def tree_flatten(self):
+        return ((self.in_src, self.in_dst, self.out_src, self.out_dst,
+                 self.p_chunk, self.p_slot, self.p_lids, self.p_blk,
+                 self.q_chunk, self.q_slot, self.q_lids, self.q_blk),
+                (self.n_nodes, self.n_edges, self.nb_in, self.nb_out,
+                 self.interpret))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        n_nodes, n_edges, nb_in, nb_out, interpret = aux
+        return cls(n_nodes, n_edges, *leaves, nb_in=nb_in, nb_out=nb_out,
+                   interpret=interpret)
+
+    def _chunked_sum(self, edge_vals, chunk_of, slot_of, lids, blk, nb):
+        c, l = lids.shape
+        cvals = jnp.zeros((c, l), jnp.float32)
+        cvals = cvals.at[chunk_of, slot_of].set(edge_vals.astype(jnp.float32))
+        out = segment_sum_chunked(cvals, lids, blk, nb,
+                                  interpret=self.interpret)
+        return out.reshape(-1)[: self.n_nodes]
+
+    def reduce_in(self, edge_vals, combine="sum"):
+        # non-sum, batched, and integer reductions fall back: the f32 matmul
+        # path would change exactness/dtype, violating backend neutrality
+        if (combine != "sum" or edge_vals.ndim != 1
+                or not jnp.issubdtype(edge_vals.dtype, jnp.floating)):
+            return super().reduce_in(edge_vals, combine)
+        return self._chunked_sum(edge_vals, self.p_chunk, self.p_slot,
+                                 self.p_lids, self.p_blk, self.nb_in)
+
+    def reduce_out(self, edge_vals, combine="sum"):
+        if (combine != "sum" or edge_vals.ndim != 1
+                or not jnp.issubdtype(edge_vals.dtype, jnp.floating)):
+            return super().reduce_out(edge_vals, combine)
+        return self._chunked_sum(edge_vals, self.q_chunk, self.q_slot,
+                                 self.q_lids, self.q_blk, self.nb_out)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BsrExec(XlaExec):
+    """Fused gather+sum pulls as MXU SpMV over 128x128 BSR tiles.
+
+    ``pull(x, "sum")`` becomes ``M @ x`` with M[dst, src] = 1 (tile stream
+    sorted by row block; kernels/bsr_spmv.py).  Everything else — min/max,
+    weighted or batched pulls, pushes — falls back to XLA.
+    """
+
+    tiles: jax.Array = None
+    rows: jax.Array = None
+    cols: jax.Array = None
+    nb: int = 0
+    block: int = DEFAULT_BLOCK
+    interpret: bool = True
+
+    def tree_flatten(self):
+        return ((self.in_src, self.in_dst, self.out_src, self.out_dst,
+                 self.tiles, self.rows, self.cols),
+                (self.n_nodes, self.n_edges, self.nb, self.block,
+                 self.interpret))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        n_nodes, n_edges, nb, block, interpret = aux
+        return cls(n_nodes, n_edges, *leaves, nb=nb, block=block,
+                   interpret=interpret)
+
+    def pull(self, x, combine="sum", edge_values=None, edge_op="mul"):
+        if (combine != "sum" or edge_values is not None or x.ndim != 1
+                or not jnp.issubdtype(x.dtype, jnp.floating)):
+            return super().pull(x, combine, edge_values, edge_op)
+        nb, b = self.nb, self.block
+        xp = jnp.zeros((nb * b,), jnp.float32)
+        xp = xp.at[: self.n_nodes].set(x.astype(jnp.float32))
+        y = bsr_spmv(self.tiles, self.rows, self.cols, xp.reshape(nb, b), nb,
+                     interpret=self.interpret)
+        return y.reshape(-1)[: self.n_nodes]
+
+
+# ---------------------------------------------------------------------------
+# exec construction (cached on the plan)
+# ---------------------------------------------------------------------------
+
+
+def get_exec(plan, backend: Optional[str] = None, *,
+             interpret: Optional[bool] = None,
+             block: int = DEFAULT_BLOCK,
+             chunk: int = DEFAULT_CHUNK) -> XlaExec:
+    """Backend Exec for a :class:`GraphPlan`, memoized on the plan."""
+    backend = select_backend(plan, backend)
+    interp = auto_interpret(interpret)
+    key = (backend, interp, block, chunk)
+    ex = plan.execs.get(key)
+    if ex is not None:
+        return ex
+    base = (plan.n_nodes, plan.n_edges, plan.in_src, plan.in_dst,
+            plan.out_src, plan.out_dst)
+    if backend == "xla":
+        ex = XlaExec(*base)
+    elif backend == "pallas":
+        p_chunk, p_slot, p_lids, p_blk, nb_in, _ = plan.chunk_layout_in(chunk)
+        q_chunk, q_slot, q_lids, q_blk, nb_out, _ = plan.chunk_layout_out(chunk)
+        ex = PallasExec(*base, p_chunk, p_slot, p_lids, p_blk,
+                        q_chunk, q_slot, q_lids, q_blk,
+                        nb_in=nb_in, nb_out=nb_out, interpret=interp)
+    else:
+        tiles, rows, cols, nb = plan.bsr(block)
+        ex = BsrExec(*base, tiles, rows, cols, nb=nb, block=block,
+                     interpret=interp)
+    plan.execs[key] = ex
+    return ex
+
+
+def pull(plan, values: jax.Array, combine: str = "sum", *,
+         backend: Optional[str] = None,
+         edge_values: Optional[jax.Array] = None, edge_op: str = "mul",
+         **exec_kw) -> jax.Array:
+    """Module-level convenience: ``get_exec(plan, backend).pull(...)``."""
+    return get_exec(plan, backend, **exec_kw).pull(values, combine,
+                                                   edge_values, edge_op)
+
+
+def push(plan, values: jax.Array, combine: str = "sum", *,
+         backend: Optional[str] = None,
+         edge_values: Optional[jax.Array] = None, edge_op: str = "mul",
+         **exec_kw) -> jax.Array:
+    """Module-level convenience: ``get_exec(plan, backend).push(...)``."""
+    return get_exec(plan, backend, **exec_kw).push(values, combine,
+                                                   edge_values, edge_op)
+
+
+# ---------------------------------------------------------------------------
+# fixpoint driver
+# ---------------------------------------------------------------------------
+
+_RUNNERS = {}
+
+
+def _leaf_changed(o: jax.Array, n: jax.Array) -> jax.Array:
+    neq = o != n
+    if jnp.issubdtype(jnp.asarray(o).dtype, jnp.inexact):
+        # NaN != NaN would spin the loop forever; a NaN that stays NaN is
+        # converged (the deleted strict-decrease conditions terminated too)
+        neq = neq & ~(jnp.isnan(o) & jnp.isnan(n))
+    return jnp.any(neq)
+
+
+def _changed(old, new) -> jax.Array:
+    flags = [_leaf_changed(o, n) for o, n in
+             zip(jax.tree_util.tree_leaves(old), jax.tree_util.tree_leaves(new))]
+    return functools.reduce(jnp.logical_or, flags, jnp.bool_(False))
+
+
+def _runner(body: Callable, fixed: bool):
+    key = (body, fixed)
+    run = _RUNNERS.get(key)
+    if run is None:
+        if fixed:
+            def run_py(ex, init, n_iter, *args):
+                return jax.lax.fori_loop(
+                    0, n_iter, lambda _, s: body(ex, s, *args), init)
+        else:
+            def run_py(ex, init, max_iter, *args):
+                def cond(carry):
+                    _, i, changed = carry
+                    return changed & (i < max_iter)
+
+                def step(carry):
+                    s, i, _ = carry
+                    ns = body(ex, s, *args)
+                    return ns, i + 1, _changed(s, ns)
+
+                final, _, _ = jax.lax.while_loop(
+                    cond, step, (init, jnp.int32(0), jnp.bool_(True)))
+                return final
+        run = _RUNNERS[key] = jax.jit(run_py)
+    return run
+
+
+def fixpoint(plan_or_exec, body: Callable, init, *,
+             n_iter: Optional[int] = None, max_iter: Optional[int] = None,
+             backend: Optional[str] = None, args: Tuple = ()):
+    """Iterate ``body(exec, state, *args) -> state`` on the engine.
+
+    With ``n_iter``: exactly that many rounds (fori_loop).  Without: until
+    the state pytree stops changing, capped at ``max_iter`` (while_loop).
+    ``body`` must be a module-level function — the jitted runner is cached
+    per body identity; pass per-call parameters via ``args`` (traced).
+    """
+    ex = (plan_or_exec if isinstance(plan_or_exec, XlaExec)
+          else get_exec(plan_or_exec, backend))
+    if n_iter is not None:
+        return _runner(body, True)(ex, init, jnp.int32(n_iter), *args)
+    cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
+    return _runner(body, False)(ex, init, jnp.int32(cap), *args)

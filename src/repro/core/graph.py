@@ -22,7 +22,7 @@ Capacities are power-of-two bucketed like tables.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
@@ -48,6 +48,11 @@ class Graph:
     out_idx: jax.Array
     in_ptr: jax.Array
     in_idx: jax.Array
+    # Identity-keyed traversal-plan cache (core/plan.py).  Not a pytree leaf:
+    # a Graph reconstructed inside jit starts with a cold cache, and the
+    # functional update methods return fresh Graph objects, so a stale plan
+    # can never be observed.
+    _plan: Optional[object] = field(default=None, repr=False, compare=False)
 
     # -- pytree ---------------------------------------------------------------
     def tree_flatten(self):
@@ -150,6 +155,26 @@ class Graph:
     def neighbors_out(self, dense_id: int) -> jax.Array:
         lo, hi = int(self.out_ptr[dense_id]), int(self.out_ptr[dense_id + 1])
         return self.out_idx[lo:hi]
+
+    # -- traversal plan (the shared-substrate hook; Ringo §2.2) -----------------
+    def plan(self):
+        """Memoized :class:`repro.core.plan.GraphPlan` for this graph.
+
+        Built on first use and cached by graph identity, so the paper's
+        trial-and-error loop — many algorithm calls against one graph —
+        pays the edge-sort / re-blocking cost exactly once.  The functional
+        update methods (:meth:`add_edges`, :meth:`delete_edges`) return new
+        ``Graph`` objects whose plan cache starts empty (invalidation by
+        construction); call :meth:`invalidate_plan` only if the underlying
+        buffers are mutated out-of-band (donated buffers etc.).
+        """
+        if self._plan is None:
+            from .plan import GraphPlan  # local import: plan -> kernels -> graph
+            self._plan = GraphPlan.build(self)
+        return self._plan
+
+    def invalidate_plan(self) -> None:
+        self._plan = None
 
     def dense_of(self, original_ids) -> jax.Array:
         """Vectorized id lookup (the hash-probe dual)."""

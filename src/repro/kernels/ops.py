@@ -1,11 +1,15 @@
-"""Public jit'd wrappers around the Pallas kernels + host-side re-blocking.
+"""Host-side re-blocking helpers + compat shims for the BSR graph kernels.
 
-These give graph-level entry points (``pagerank_bsr``, ``triangle_count_bsr``,
-``segment_sum_sorted``) used by benchmarks and the distributed engine.  The
-host-side helpers perform the *re-blocking* that adapts Ringo's per-edge
+The host-side helpers perform the *re-blocking* that adapts Ringo's per-edge
 algorithms to MXU tiles: edges → 128×128 BSR tiles / 128-wide chunked
-segments.  On non-TPU backends the kernels run in interpret mode
-(``interpret=None`` → auto).
+segments.  They are conversion-time work, invoked once per graph by
+:class:`repro.core.plan.GraphPlan` and cached there.
+
+``pagerank_bsr`` / ``triangle_count_bsr`` are retained as thin compatibility
+shims: the BSR kernels are now a *backend* of the unified traversal engine
+(``core/engine.py``), so these simply run the shared algorithm with
+``backend="bsr"`` instead of maintaining a rival implementation.  On non-TPU
+backends the kernels run in interpret mode (``interpret=None`` → auto).
 """
 
 from __future__ import annotations
@@ -17,9 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import Graph
-from .bsr_spmv import bsr_spmv
 from .bsr_tricount import bsr_tricount
-from .segment_sum import DEFAULT_BLOCK, DEFAULT_CHUNK, segment_sum_chunked
+from .segment_sum import (DEFAULT_BLOCK, DEFAULT_CHUNK, chunk_layout,
+                          segment_sum_chunked)
 
 __all__ = [
     "auto_interpret",
@@ -108,44 +112,38 @@ def build_block_triples(rows: np.ndarray, cols: np.ndarray
 
 
 # ---------------------------------------------------------------------------
-# graph-level entry points
+# graph-level entry points — compat shims over the unified engine
 # ---------------------------------------------------------------------------
 
 
 def pagerank_bsr(g: Graph, n_iter: int = 10, damping: float = 0.85,
                  interpret: Optional[bool] = None,
                  block: int = DEFAULT_BLOCK) -> jax.Array:
-    """PageRank with the BSR SpMV Pallas kernel as the inner contraction."""
-    interpret = auto_interpret(interpret)
-    n = g.n_nodes
-    src, dst = g.in_edges()
-    out_deg = np.asarray(g.out_degrees(), dtype=np.float32)
-    src_np = np.asarray(src)
-    w = 1.0 / out_deg[src_np]                       # column-stochastic M
-    tiles, rows, cols, nb = edges_to_bsr(src_np, np.asarray(dst), n,
-                                         values=w, block=block)
-    dangling = jnp.asarray(out_deg == 0)
-    pr = jnp.full((nb * block,), 0.0).at[:n].set(1.0 / n)
-    for _ in range(n_iter):
-        x_blocks = pr.reshape(nb, block)
-        y = bsr_spmv(tiles, rows, cols, x_blocks, nb, interpret=interpret)
-        y = y.reshape(-1)[: n]
-        dang = jnp.sum(jnp.where(dangling, pr[:n], 0.0))
-        new = (1.0 - damping) / n + damping * (y + dang / n)
-        pr = pr.at[:n].set(new)
-    return pr[:n]
+    """PageRank on the engine's "bsr" backend (BSR SpMV inner contraction)."""
+    from ..core import algorithms, engine
+    if g.n_nodes == 0:
+        return jnp.zeros((0,), jnp.float32)
+    plan = g.plan()
+    ex = engine.get_exec(plan, "bsr", interpret=interpret, block=block)
+    pr0 = jnp.full((g.n_nodes,), 1.0 / g.n_nodes, dtype=jnp.float32)
+    return engine.fixpoint(ex, algorithms._pagerank_body, pr0, n_iter=n_iter,
+                           args=(jnp.float32(damping), plan.inv_out_deg,
+                                 plan.dangling))
 
 
 def triangle_count_bsr(g: Graph, interpret: Optional[bool] = None,
                        block: int = DEFAULT_BLOCK) -> int:
     """Triangle count via the A∘(A·A) MXU kernel (g must be undirected)."""
-    interpret = auto_interpret(interpret)
-    src, dst = g.out_edges()
-    tiles, rows, cols, nb = edges_to_bsr(np.asarray(dst), np.asarray(src),
-                                         g.n_nodes, block=block)
-    tiles = jnp.minimum(tiles, 1.0)                 # simple graph: 0/1
-    t_ij, t_ik, t_kj = build_block_triples(np.asarray(rows), np.asarray(cols))
-    six_t = bsr_tricount(tiles, t_ij, t_ik, t_kj, interpret=interpret)
+    from ..core.algorithms import triangle_count
+    if block == DEFAULT_BLOCK:
+        return triangle_count(g, backend="bsr", interpret=interpret)
+    if g.n_edges == 0 or g.n_nodes == 0:
+        return 0
+    plan = g.plan()
+    tiles, _, _, _ = plan.bsr(block)
+    t_ij, t_ik, t_kj = plan.tri_triples(block)
+    six_t = bsr_tricount(jnp.minimum(tiles, 1.0), t_ij, t_ik, t_kj,
+                         interpret=auto_interpret(interpret))
     return int(round(float(six_t) / 6.0))
 
 
@@ -154,35 +152,18 @@ def segment_sum_sorted(vals: jax.Array, seg_ids: jax.Array, n_segments: int,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Segment-sum of values whose ``seg_ids`` are sorted ascending.
 
-    Host-side chunking: group by 128-wide id block (already contiguous),
-    pad each group to a multiple of ``chunk``, then run the one-hot-matmul
-    kernel.  Returns (n_segments,) f32.
+    Host-side chunking via :func:`kernels.segment_sum.chunk_layout` (fully
+    vectorized; the same structure GraphPlan caches per graph): group by
+    128-wide id block, split each group into ``chunk``-long chunks, scatter
+    the values in and run the one-hot-matmul kernel.  Returns (n_segments,)
+    f32.
     """
     interpret = auto_interpret(interpret)
-    b = DEFAULT_BLOCK
-    nb = (n_segments + b - 1) // b
-    seg_np = np.asarray(seg_ids, dtype=np.int64)
-    val_np = np.asarray(vals, dtype=np.float32)
-    blocks = seg_np // b
-    # group boundaries per 128-block (sorted input => contiguous)
-    starts = np.searchsorted(blocks, np.arange(nb), side="left")
-    ends = np.searchsorted(blocks, np.arange(nb), side="right")
-    counts = ends - starts
-    n_chunks = np.maximum((counts + chunk - 1) // chunk, 1)  # >=1 per block
-    total_chunks = int(n_chunks.sum())
-    cvals = np.zeros((total_chunks, chunk), np.float32)
-    clids = np.full((total_chunks, chunk), b, np.int32)      # pad id = b
-    cblk = np.zeros((total_chunks,), np.int32)
-    ci = 0
-    for blk in range(nb):
-        lo, hi = int(starts[blk]), int(ends[blk])
-        for off in range(0, max(hi - lo, 1), chunk):
-            take = min(chunk, max(hi - lo - off, 0))
-            if take > 0:
-                cvals[ci, :take] = val_np[lo + off: lo + off + take]
-                clids[ci, :take] = (seg_np[lo + off: lo + off + take] % b)
-            cblk[ci] = blk
-            ci += 1
-    out = segment_sum_chunked(jnp.asarray(cvals), jnp.asarray(clids),
-                              jnp.asarray(cblk), nb, interpret=interpret)
+    entry_chunk, entry_slot, lids, cblk, nb, total = chunk_layout(
+        np.asarray(seg_ids), n_segments, chunk)
+    cvals = jnp.zeros((total, chunk), jnp.float32)
+    cvals = cvals.at[jnp.asarray(entry_chunk), jnp.asarray(entry_slot)].set(
+        jnp.asarray(vals).astype(jnp.float32))
+    out = segment_sum_chunked(cvals, jnp.asarray(lids), jnp.asarray(cblk),
+                              nb, interpret=interpret)
     return out.reshape(-1)[: n_segments]

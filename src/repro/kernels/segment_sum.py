@@ -21,16 +21,58 @@ L=512, B=128, f32.  Also the group-by/aggregate hot loop (relational.py).
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["segment_sum_chunked"]
+__all__ = ["segment_sum_chunked", "chunk_layout"]
 
 DEFAULT_CHUNK = 512
 DEFAULT_BLOCK = 128
+
+
+def chunk_layout(seg_ids: np.ndarray, n_segments: int,
+                 chunk: int = DEFAULT_CHUNK
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                            int, int]:
+    """Static chunking structure for **sorted** segment ids (host-side).
+
+    Groups entries by 128-wide output block and splits each group into
+    ``chunk``-long chunks (every block gets >= 1 chunk so the kernel's
+    accumulator init fires).  The structure depends only on ``seg_ids``, so
+    callers (``GraphPlan``) compute it once per graph and re-scatter fresh
+    values into it on every reduction:
+
+        cvals = zeros((C, L)).at[entry_chunk, entry_slot].set(vals)
+
+    Returns ``(entry_chunk, entry_slot, local_ids, chunk_block, nb, C)``
+    where ``local_ids`` is (C, L) int32 with pad id = 128, ``chunk_block``
+    is (C,) sorted ascending, ``nb`` the output block count and ``C`` the
+    total chunk count.
+    """
+    b = DEFAULT_BLOCK
+    nb = max((n_segments + b - 1) // b, 1)
+    seg = np.asarray(seg_ids, dtype=np.int64)
+    e = int(seg.shape[0])
+    blocks = seg // b
+    starts = np.searchsorted(blocks, np.arange(nb), side="left")
+    ends = np.searchsorted(blocks, np.arange(nb), side="right")
+    counts = ends - starts
+    n_chunks = np.maximum((counts + chunk - 1) // chunk, 1)
+    base = np.concatenate([[0], np.cumsum(n_chunks)[:-1]])
+    total = int(n_chunks.sum())
+    pos = np.arange(e) - starts[blocks]
+    entry_chunk = (base[blocks] + pos // chunk).astype(np.int32)
+    entry_slot = (pos % chunk).astype(np.int32)
+    local_ids = np.full((total, chunk), b, np.int32)
+    if e:
+        local_ids[entry_chunk, entry_slot] = (seg % b).astype(np.int32)
+    chunk_block = np.repeat(np.arange(nb), n_chunks).astype(np.int32)
+    return entry_chunk, entry_slot, local_ids, chunk_block, nb, total
 
 
 def _segsum_kernel(outblk_ref, vals_ref, lids_ref, out_ref):

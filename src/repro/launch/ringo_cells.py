@@ -117,9 +117,9 @@ def run_ringo_cell(shape_name: str, multi_pod: bool) -> Dict:
             lowered = jax.jit(fn).lower(*args)
             compiled = lowered.compile()
     t1 = time.time()
-    from .hlo_cost import analyze_hlo
+    from .hlo_cost import analyze_hlo, xla_cost_dict
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost_dict(compiled)
     corrected = analyze_hlo(compiled.as_text())
     return {
         "arch": "ringo-graph", "shape": shape_name, "kind": "graph",

@@ -7,6 +7,12 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running end-to-end test (deselect with -m 'not slow')")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -82,10 +82,11 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_distributed_suite():
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: the 8 simulated host devices work under JAX_PLATFORMS=cpu,
+    # and it skips libtpu's minutes-long TPU-metadata probe on TPU-less hosts
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     proc = subprocess.run([sys.executable, "-W", "ignore", "-c", SCRIPT],
-                          capture_output=True, text=True, timeout=540,
+                          capture_output=True, text=True, timeout=1200,
                           env=env, cwd=os.path.dirname(os.path.dirname(
                               os.path.abspath(__file__))))
     assert "DISTRIBUTED-OK" in proc.stdout, \

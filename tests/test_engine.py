@@ -1,0 +1,249 @@
+"""Unified traversal engine: backend parity, plan caching, batched traversal.
+
+Covers the plan/engine layering (core/plan.py + core/engine.py): the three
+backends must agree bit-for-bit-ish on real algorithms over RMAT graphs, a
+second call on the same Graph must reuse the cached plan (zero re-sorting),
+and functional updates must invalidate by construction.
+"""
+
+import inspect
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import algorithms as A
+from repro.core import engine
+from repro.core.graph import Graph
+from repro.data.rmat import rmat_edges
+
+BACKENDS = ["xla", "pallas", "bsr"]
+
+
+def rmat_graph(scale=6, edge_factor=4, seed=0):
+    s, d = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
+    return Graph.from_edges(s, d)
+
+
+# ---------------------------------------------------------------------------
+# primitive parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pull_sum_matches_oracle(backend):
+    g = rmat_graph(seed=1)
+    plan = g.plan()
+    x = jnp.arange(g.n_nodes, dtype=jnp.float32) + 1.0
+    got = np.asarray(engine.pull(plan, x, "sum", backend=backend,
+                                 interpret=True))
+    s, d = (np.asarray(a) for a in g.in_edges())
+    want = np.zeros(g.n_nodes, np.float32)
+    np.add.at(want, d, np.asarray(x)[s])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_push_sum_matches_oracle(backend):
+    g = rmat_graph(seed=2)
+    plan = g.plan()
+    x = jnp.arange(g.n_nodes, dtype=jnp.float32) + 1.0
+    got = np.asarray(engine.push(plan, x, "sum", backend=backend,
+                                 interpret=True))
+    s, d = (np.asarray(a) for a in g.out_edges())
+    want = np.zeros(g.n_nodes, np.float32)
+    np.add.at(want, s, np.asarray(x)[d])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pull_sum_integer_dtype_neutral():
+    # f32-only kernel paths must fall back so backend choice never changes
+    # the result dtype or integer exactness
+    g = rmat_graph(seed=41)
+    plan = g.plan()
+    x = jnp.ones((g.n_nodes,), jnp.int32)
+    ref = engine.pull(plan, x, "sum", backend="xla")
+    for be in ("pallas", "bsr"):
+        got = engine.pull(plan, x, "sum", backend=be, interpret=True)
+        assert got.dtype == ref.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_pull_min_max_all_backends_agree():
+    g = rmat_graph(seed=3)
+    plan = g.plan()
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=g.n_nodes).astype(np.float32))
+    ref = np.asarray(engine.pull(plan, x, "min", backend="xla"))
+    for be in ("pallas", "bsr"):   # non-sum combines fall back, same result
+        np.testing.assert_array_equal(
+            np.asarray(engine.pull(plan, x, "min", backend=be,
+                                   interpret=True)), ref)
+
+
+# ---------------------------------------------------------------------------
+# algorithm parity across backends (RMAT graphs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pagerank_backend_parity(backend):
+    g = rmat_graph(scale=7, edge_factor=4, seed=5)
+    ref = np.asarray(A.pagerank(g, n_iter=8, backend="xla"))
+    got = np.asarray(A.pagerank(g, n_iter=8, backend=backend, interpret=True))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+    assert abs(got.sum() - 1.0) < 1e-4
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_connected_components_backend_parity(backend):
+    g = rmat_graph(scale=6, edge_factor=1, seed=7)   # sparse -> many comps
+    ref = np.asarray(A.connected_components(g, backend="xla"))
+    got = np.asarray(A.connected_components(g, backend=backend,
+                                            interpret=True))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_triangle_count_backend_parity():
+    u = rmat_graph(scale=6, edge_factor=4, seed=11).to_undirected()
+    ref = A.triangle_count(u)
+    assert A.triangle_count(u, backend="bsr", interpret=True) == ref
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_hits_backend_parity(backend):
+    g = rmat_graph(seed=13)
+    hub_ref, auth_ref = (np.asarray(x) for x in A.hits(g, n_iter=10,
+                                                       backend="xla"))
+    hub, auth = (np.asarray(x) for x in A.hits(g, n_iter=10, backend=backend,
+                                               interpret=True))
+    np.testing.assert_allclose(hub, hub_ref, atol=1e-5)
+    np.testing.assert_allclose(auth, auth_ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_k_core_backend_parity(backend):
+    g = rmat_graph(seed=17)
+    ref = np.asarray(A.k_core(g, 3, backend="xla"))
+    got = np.asarray(A.k_core(g, 3, backend=backend, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# plan caching: repeated calls pay the sort cost once
+# ---------------------------------------------------------------------------
+
+
+def test_plan_is_memoized_by_identity():
+    g = rmat_graph(seed=19)
+    assert g.plan() is g.plan()
+    ex = engine.get_exec(g.plan(), "xla")
+    assert engine.get_exec(g.plan(), "xla") is ex
+
+
+def test_repeated_pagerank_does_zero_resorting(monkeypatch):
+    g = rmat_graph(seed=23)
+    first = np.asarray(A.pagerank(g, n_iter=5))
+
+    def boom(*a, **kw):  # any re-derivation of edge arrays would call these
+        raise AssertionError("plan cache miss: graph re-sorted on 2nd call")
+
+    monkeypatch.setattr(Graph, "in_edges", boom)
+    monkeypatch.setattr(Graph, "out_edges", boom)
+    monkeypatch.setattr(Graph, "out_degrees", boom)
+    second = np.asarray(A.pagerank(g, n_iter=5))
+    np.testing.assert_array_equal(first, second)
+
+
+def test_plan_caches_undirected_and_oriented():
+    g = rmat_graph(seed=29)
+    plan = g.plan()
+    assert plan.undirected() is plan.undirected()
+    assert plan.oriented() is plan.oriented()
+    assert plan.bsr() is plan.bsr()
+    assert plan.chunk_layout_in() is plan.chunk_layout_in()
+
+
+def test_functional_updates_invalidate_plan():
+    g = Graph.from_edges([1, 2], [2, 3])
+    p = g.plan()
+    g2 = g.add_edges([3], [1])
+    assert g2.plan() is not p
+    # results reflect the new edge (3->1 closes the cycle)
+    lab = np.asarray(A.connected_components(g2))
+    assert len(set(lab.tolist())) == 1
+    g3 = g2.delete_edges([3], [1])
+    assert g3.plan() is not g2.plan()
+    assert g3.n_edges == 2
+    g.invalidate_plan()
+    assert g.plan() is not p
+
+
+# ---------------------------------------------------------------------------
+# batched multi-source traversal (vmap over the engine)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_bfs_matches_single_source():
+    g = rmat_graph(seed=31)
+    sources = jnp.asarray([0, 1, 5], dtype=jnp.int32)
+    batched = np.asarray(A.bfs(g, sources))
+    assert batched.shape == (3, g.n_nodes)
+    for i, s in enumerate([0, 1, 5]):
+        np.testing.assert_array_equal(batched[i], np.asarray(A.bfs(g, s)))
+
+
+def test_batched_sssp_weighted():
+    g = Graph.from_edges([0, 1, 0], [1, 2, 2])
+    # in-edge order (sorted by dst, then src): (0->1), (0->2), (1->2)
+    w = jnp.asarray([1.0, 5.0, 1.0])
+    d = np.asarray(A.sssp(g, jnp.asarray([0], dtype=jnp.int32), weights=w))
+    assert d.shape == (1, 3)
+    assert d[0, 2] == pytest.approx(2.0)   # 0->1->2 beats the heavy 0->2
+
+
+# ---------------------------------------------------------------------------
+# fixpoint driver + layering invariants
+# ---------------------------------------------------------------------------
+
+
+def _collatz_ish_body(ex, v):
+    return jnp.minimum(v, ex.pull(v, "min"))
+
+
+def test_fixpoint_max_iter_caps_rounds():
+    g = Graph.from_edges(list(range(9)), list(range(1, 10)))  # path graph
+    plan = g.plan()
+    v0 = jnp.arange(g.n_nodes, dtype=jnp.int32)
+    one = engine.fixpoint(plan, _collatz_ish_body, v0, max_iter=1)
+    full = engine.fixpoint(plan, _collatz_ish_body, v0)
+    assert int(np.asarray(one).max()) > 0       # capped: not yet converged
+    assert np.asarray(full).max() == 0          # converged: all labels 0
+
+
+def test_fixpoint_terminates_on_nan_state():
+    # NaN != NaN must not spin the until-unchanged loop forever
+    g = Graph.from_edges([0, 1], [1, 0])
+    d = np.asarray(A.sssp(g, 0, weights=jnp.asarray([jnp.nan, 1.0])))
+    assert d.shape == (2,)          # terminating at all is the assertion
+
+
+def test_triangle_count_rejects_unknown_backend():
+    u = Graph.from_edges([0, 1, 2], [1, 2, 0]).to_undirected()
+    with pytest.raises(ValueError):
+        A.triangle_count(u, backend="pallas")
+
+
+def test_algorithms_route_through_engine_only():
+    """Acceptance: no direct jax.ops.segment_* call sites in algorithms.py."""
+    src = inspect.getsource(A)
+    assert "jax.ops.segment_" not in src
+    assert "segment_sum(" not in src
+
+
+def test_select_backend_override_and_validation():
+    g = rmat_graph(seed=37)
+    assert engine.select_backend(g.plan(), "bsr") == "bsr"
+    assert engine.select_backend(g.plan()) in engine.BACKENDS
+    with pytest.raises(ValueError):
+        engine.select_backend(g.plan(), "tpu_magic")

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.graph import Graph, INVALID_ID
 from repro.core.table import Table, INT

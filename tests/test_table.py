@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.table import Table, Schema, INT, FLOAT, STR, next_capacity
 from repro.core import relational as R
