@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# Make-free tier-1 gate: full test suite + engine perf smoke.
+# Make-free tier-1 gate: full test suite + engine & service perf smoke.
 #
-#   benchmarks/ci_check.sh            # tests + benchmark -> BENCH_engine.json
+#   benchmarks/ci_check.sh            # tests + benchmarks -> BENCH_*.json
 #   benchmarks/ci_check.sh --scale 12 # extra args forwarded to bench_engine
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -9,3 +9,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python benchmarks/bench_engine.py --out BENCH_engine.json "$@"
+# interactive service: concurrent-session throughput/latency on 2^15 RMAT,
+# with/without fusion + caching (gate: fused_cached >= 2x sequential)
+python benchmarks/bench_service.py --out BENCH_service.json
+python - <<'EOF'
+import json
+r = json.load(open("BENCH_service.json"))
+assert r["speedup_fused_cached"] >= 2.0, \
+    f"service fused+cached speedup {r['speedup_fused_cached']}x < 2x gate"
+print(f"service gate OK: fused+cached {r['speedup_fused_cached']}x")
+EOF

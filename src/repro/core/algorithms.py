@@ -31,9 +31,11 @@ import numpy as np
 
 from . import engine
 from .graph import Graph
+from .provenance import track
 
 __all__ = [
     "pagerank",
+    "personalized_pagerank",
     "triangle_count",
     "per_node_triangles",
     "clustering_coefficient",
@@ -67,6 +69,7 @@ def _pagerank_body(ex, pr, damping, inv_deg, dangling):
     return (1.0 - damping) / n + damping * (summed + dang / n)
 
 
+@track("algorithms.pagerank", "A.pagerank")
 def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85, *,
              backend: Optional[str] = None,
              interpret: Optional[bool] = None) -> jax.Array:
@@ -83,6 +86,41 @@ def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85, *,
     return engine.fixpoint(ex, _pagerank_body, pr0, n_iter=n_iter,
                            args=(jnp.float32(damping), plan.inv_out_deg,
                                  plan.dangling))
+
+
+def _ppr_body(ex, pr, damping, inv_deg, dangling, restart):
+    summed = ex.pull(pr * inv_deg, "sum")
+    dang = jnp.sum(jnp.where(dangling, pr, 0.0))
+    return (1.0 - damping) * restart + damping * (summed + dang * restart)
+
+
+@track("algorithms.personalized_pagerank", "A.personalized_pagerank")
+def personalized_pagerank(g: Graph, source, n_iter: int = 10,
+                          damping: float = 0.85, *,
+                          backend: Optional[str] = None,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Random-walk-with-restart PageRank personalized to ``source``.
+
+    Teleport and dangling mass both return to the restart distribution
+    (a one-hot at the source).  Like :func:`sssp`, ``source`` may be a
+    scalar (returns ``(n,)``) or an array of k sources (returns ``(k, n)``,
+    batched via ``vmap`` over the engine fixpoint) — the fusion target for
+    the interactive service's scheduler.
+    """
+    if g.n_nodes == 0:
+        return jnp.zeros((0,), jnp.float32)
+    plan, ex = _exec_for(g, backend, interpret)
+    scalar = np.ndim(source) == 0
+    sources = jnp.atleast_1d(jnp.asarray(source, dtype=jnp.int32))
+
+    def one(s):
+        restart = jnp.zeros((g.n_nodes,), jnp.float32).at[s].set(1.0)
+        return engine.fixpoint(ex, _ppr_body, restart, n_iter=n_iter,
+                               args=(jnp.float32(damping), plan.inv_out_deg,
+                                     plan.dangling, restart))
+
+    prs = jax.vmap(one)(sources)
+    return prs[0] if scalar else prs
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +174,7 @@ def triangle_count(g: Graph, edge_chunk: int = 1 << 16, *,
     return total
 
 
+@track("algorithms.per_node_triangles", "A.per_node_triangles")
 def per_node_triangles(g: Graph, edge_chunk: int = 1 << 16) -> jax.Array:
     """Triangles incident to each node (undirected simple graph)."""
     if g.n_edges == 0 or g.n_nodes == 0:
@@ -158,6 +197,7 @@ def per_node_triangles(g: Graph, edge_chunk: int = 1 << 16) -> jax.Array:
     return counts
 
 
+@track("algorithms.clustering_coefficient", "A.clustering_coefficient")
 def clustering_coefficient(g: Graph) -> jax.Array:
     """Local clustering coefficient per node (undirected simple graph)."""
     tri = per_node_triangles(g).astype(jnp.float32)
@@ -181,6 +221,7 @@ def _cc_body(ex, labels):
     return new
 
 
+@track("algorithms.connected_components", "A.connected_components")
 def connected_components(g: Graph, *, backend: Optional[str] = None,
                          interpret: Optional[bool] = None) -> jax.Array:
     """Weakly-connected component labels (min node id in component)."""
@@ -202,6 +243,7 @@ def _sssp_body(ex, dist, w):
     return jnp.minimum(dist, relaxed)
 
 
+@track("algorithms.sssp", "A.sssp")
 def sssp(g: Graph, source, weights: Optional[jax.Array] = None, *,
          backend: Optional[str] = None,
          interpret: Optional[bool] = None) -> jax.Array:
@@ -226,6 +268,7 @@ def sssp(g: Graph, source, weights: Optional[jax.Array] = None, *,
     return dists[0] if scalar else dists
 
 
+@track("algorithms.bfs", "A.bfs")
 def bfs(g: Graph, source, *, backend: Optional[str] = None,
         interpret: Optional[bool] = None) -> jax.Array:
     """BFS levels (unweighted SSSP); -1 for unreachable.  Batched like sssp."""
@@ -245,6 +288,7 @@ def _k_core_body(ex, alive, k):
     return alive & (deg >= k)
 
 
+@track("algorithms.k_core", "A.k_core")
 def k_core(g: Graph, k: int, *, backend: Optional[str] = None,
            interpret: Optional[bool] = None) -> jax.Array:
     """Boolean mask of nodes in the k-core (iterative parallel peeling)."""
@@ -255,6 +299,7 @@ def k_core(g: Graph, k: int, *, backend: Optional[str] = None,
     return alive[u.dense_of(g.node_ids[: g.n_nodes])]
 
 
+@track("algorithms.core_numbers", "A.core_numbers")
 def core_numbers(g: Graph, k_max: Optional[int] = None, *,
                  backend: Optional[str] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
@@ -319,6 +364,7 @@ def _scc_round(ex, scc):
     return jnp.where(un & reach, color, scc)
 
 
+@track("algorithms.strongly_connected_components", "A.strongly_connected_components")
 def strongly_connected_components(g: Graph, *,
                                   backend: Optional[str] = None,
                                   interpret: Optional[bool] = None
@@ -346,6 +392,7 @@ def _hits_body(ex, ha):
     return hub, auth
 
 
+@track("algorithms.hits", "A.hits")
 def hits(g: Graph, n_iter: int = 20, *, backend: Optional[str] = None,
          interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """HITS hub/authority scores (paper §4.1 mentions Hits for experts)."""
@@ -377,6 +424,7 @@ def _eigen_body(ex, v):
     return nv / jnp.maximum(jnp.linalg.norm(nv), 1e-30)
 
 
+@track("algorithms.eigenvector_centrality", "A.eigenvector_centrality")
 def eigenvector_centrality(g: Graph, n_iter: int = 50, *,
                            backend: Optional[str] = None,
                            interpret: Optional[bool] = None) -> jax.Array:
@@ -402,6 +450,7 @@ def _lp_body(ex, lab):
     return jnp.minimum(lab, m)
 
 
+@track("algorithms.label_propagation", "A.label_propagation")
 def label_propagation(g: Graph, n_iter: int = 20, *,
                       backend: Optional[str] = None,
                       interpret: Optional[bool] = None) -> jax.Array:
@@ -414,6 +463,7 @@ def label_propagation(g: Graph, n_iter: int = 20, *,
     return lab[u.dense_of(g.node_ids[: g.n_nodes])]
 
 
+@track("algorithms.closeness_centrality", "A.closeness_centrality")
 def closeness_centrality(g: Graph, sources: Optional[jax.Array] = None,
                          n_samples: int = 16, *,
                          backend: Optional[str] = None,

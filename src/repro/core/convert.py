@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph
+from .provenance import track
 from .table import INT, FLOAT, Schema, Table, next_capacity
 
 __all__ = [
@@ -28,6 +29,7 @@ __all__ = [
 ]
 
 
+@track("convert.to_graph", "C.to_graph")
 def to_graph(t: Table, src_col: str, dst_col: str, dedupe: bool = True,
              drop_self_loops: bool = False) -> Graph:
     """Paper's ``ToGraph(T, S, D)``: nodes = unique values of S ∪ D, one edge
@@ -55,6 +57,7 @@ def to_graph(t: Table, src_col: str, dst_col: str, dedupe: bool = True,
     return Graph.from_edges(src, dst, dedupe=dedupe, drop_self_loops=drop_self_loops)
 
 
+@track("convert.graph_to_edge_table", "C.graph_to_edge_table")
 def graph_to_edge_table(g: Graph, src_name: str = "src", dst_name: str = "dst") -> Table:
     """Edge table with original node ids (paper: graph→table at ~50 M edges/s)."""
     s, d = g.out_edges()
@@ -64,6 +67,7 @@ def graph_to_edge_table(g: Graph, src_name: str = "src", dst_name: str = "dst") 
     )
 
 
+@track("convert.graph_to_node_table", "C.graph_to_node_table")
 def graph_to_node_table(g: Graph, values: Optional[Dict[str, jax.Array]] = None,
                         id_name: str = "node") -> Table:
     """Node table: original ids plus optional per-node value columns
@@ -77,6 +81,7 @@ def graph_to_node_table(g: Graph, values: Optional[Dict[str, jax.Array]] = None,
     return Table.from_columns(Schema.of(fields), data)
 
 
+@track("convert.table_from_map", "C.table_from_map")
 def table_from_map(g: Graph, scores: jax.Array, key_name: str = "node",
                    value_name: str = "score") -> Table:
     """Paper's ``TableFromHashMap(PR, 'User', 'Scr')`` analogue: per-node

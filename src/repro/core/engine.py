@@ -16,7 +16,8 @@ whole algorithm library):
         |                               "pallas" kernels/segment_sum one-hot
         |                                        matmul (sum reductions)
         |                               "bsr"    kernels/bsr_spmv MXU SpMV
-        v                                        (fused gather+sum pulls)
+        v                                        (fused gather+sum pulls and
+                                                 pushes via transpose tiles)
     core/algorithms.py  pagerank, hits, eigenvector_centrality, CC, SCC,
                         sssp/bfs (batched multi-source), k-core, label
                         propagation, triangles — thin compositions over the
@@ -36,8 +37,9 @@ until the state stops changing.  Bodies must be module-level functions
 ``args`` so they are traced, not baked into the compile cache.
 
 Backends that cannot serve a request (min/max or integer sums on "pallas",
-weighted, batched or integer pulls on "bsr") transparently fall back to the
-XLA primitives, so backend choice never changes semantics — only speed.
+weighted, batched or integer pulls/pushes on "bsr") transparently fall back
+to the XLA primitives, so backend choice never changes semantics — only
+speed.
 """
 
 from __future__ import annotations
@@ -225,23 +227,29 @@ class PallasExec(XlaExec):
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class BsrExec(XlaExec):
-    """Fused gather+sum pulls as MXU SpMV over 128x128 BSR tiles.
+    """Fused gather+sum pulls AND pushes as MXU SpMV over 128x128 BSR tiles.
 
-    ``pull(x, "sum")`` becomes ``M @ x`` with M[dst, src] = 1 (tile stream
-    sorted by row block; kernels/bsr_spmv.py).  Everything else — min/max,
-    weighted or batched pulls, pushes — falls back to XLA.
+    ``pull(x, "sum")`` is ``M @ x`` with M[dst, src] = 1; ``push(x, "sum")``
+    is ``Mᵀ @ x`` over a separately-blocked transpose tile stream
+    (``plan.bsr_t``), so the HITS hub step takes the same MXU path as the
+    authority step.  Everything else — min/max, weighted or batched
+    reductions — falls back to XLA.
     """
 
     tiles: jax.Array = None
     rows: jax.Array = None
     cols: jax.Array = None
+    tiles_t: jax.Array = None   # transpose stream: M[src, dst] (push layout)
+    rows_t: jax.Array = None
+    cols_t: jax.Array = None
     nb: int = 0
     block: int = DEFAULT_BLOCK
     interpret: bool = True
 
     def tree_flatten(self):
         return ((self.in_src, self.in_dst, self.out_src, self.out_dst,
-                 self.tiles, self.rows, self.cols),
+                 self.tiles, self.rows, self.cols,
+                 self.tiles_t, self.rows_t, self.cols_t),
                 (self.n_nodes, self.n_edges, self.nb, self.block,
                  self.interpret))
 
@@ -251,16 +259,25 @@ class BsrExec(XlaExec):
         return cls(n_nodes, n_edges, *leaves, nb=nb, block=block,
                    interpret=interpret)
 
+    def _spmv(self, tiles, rows, cols, x):
+        nb, b = self.nb, self.block
+        xp = jnp.zeros((nb * b,), jnp.float32)
+        xp = xp.at[: self.n_nodes].set(x.astype(jnp.float32))
+        y = bsr_spmv(tiles, rows, cols, xp.reshape(nb, b), nb,
+                     interpret=self.interpret)
+        return y.reshape(-1)[: self.n_nodes]
+
     def pull(self, x, combine="sum", edge_values=None, edge_op="mul"):
         if (combine != "sum" or edge_values is not None or x.ndim != 1
                 or not jnp.issubdtype(x.dtype, jnp.floating)):
             return super().pull(x, combine, edge_values, edge_op)
-        nb, b = self.nb, self.block
-        xp = jnp.zeros((nb * b,), jnp.float32)
-        xp = xp.at[: self.n_nodes].set(x.astype(jnp.float32))
-        y = bsr_spmv(self.tiles, self.rows, self.cols, xp.reshape(nb, b), nb,
-                     interpret=self.interpret)
-        return y.reshape(-1)[: self.n_nodes]
+        return self._spmv(self.tiles, self.rows, self.cols, x)
+
+    def push(self, x, combine="sum", edge_values=None, edge_op="mul"):
+        if (combine != "sum" or edge_values is not None or x.ndim != 1
+                or not jnp.issubdtype(x.dtype, jnp.floating)):
+            return super().push(x, combine, edge_values, edge_op)
+        return self._spmv(self.tiles_t, self.rows_t, self.cols_t, x)
 
 
 # ---------------------------------------------------------------------------
@@ -291,8 +308,9 @@ def get_exec(plan, backend: Optional[str] = None, *,
                         nb_in=nb_in, nb_out=nb_out, interpret=interp)
     else:
         tiles, rows, cols, nb = plan.bsr(block)
-        ex = BsrExec(*base, tiles, rows, cols, nb=nb, block=block,
-                     interpret=interp)
+        tiles_t, rows_t, cols_t, _ = plan.bsr_t(block)
+        ex = BsrExec(*base, tiles, rows, cols, tiles_t, rows_t, cols_t,
+                     nb=nb, block=block, interpret=interp)
     plan.execs[key] = ex
     return ex
 

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .provenance import track, version_of
 from .table import next_capacity
 
 __all__ = ["Graph", "INVALID_ID"]
@@ -176,6 +177,17 @@ class Graph:
     def invalidate_plan(self) -> None:
         self._plan = None
 
+    @property
+    def version(self) -> str:
+        """Provenance version token (Ringo §2.1 object metadata).
+
+        Graphs are immutable and the update methods return fresh objects, so
+        the token doubles as a cache key: any result computed against it stays
+        valid forever — a functional update yields a new token, which is the
+        service-layer mirror of the plan cache's invalidation-by-construction.
+        """
+        return version_of(self)
+
     def dense_of(self, original_ids) -> jax.Array:
         """Vectorized id lookup (the hash-probe dual)."""
         q = jnp.asarray(original_ids, dtype=jnp.int32)
@@ -185,6 +197,7 @@ class Graph:
         return self.node_ids[jnp.asarray(dense_ids, dtype=jnp.int32)]
 
     # -- functional updates (the dynamism story) -----------------------------------
+    @track("graph.add_edges", "Graph.add_edges")
     def add_edges(self, src, dst, dedupe: bool = True) -> "Graph":
         """Merge new edges (original ids) — functional rebuild via sorted merge."""
         osrc = self.original_of(self.out_edges()[0])
@@ -193,6 +206,7 @@ class Graph:
         dst = jnp.concatenate([odst, jnp.asarray(dst, jnp.int32)])
         return Graph.from_edges(src, dst, dedupe=dedupe)
 
+    @track("graph.delete_edges", "Graph.delete_edges")
     def delete_edges(self, src, dst) -> "Graph":
         """Remove the given (original-id) edges; sort-based anti-join.
 
@@ -209,6 +223,7 @@ class Graph:
         return Graph.from_edges(os[keep].astype(np.int32),
                                 od[keep].astype(np.int32), dedupe=False)
 
+    @track("graph.to_undirected", "Graph.to_undirected")
     def to_undirected(self) -> "Graph":
         """Symmetrized simple graph (for triangles / k-core / WCC)."""
         s, d = self.out_edges()

@@ -21,7 +21,9 @@ Lazily built and cached on first use:
 
     undirected()       symmetrized simple-graph view (CC / k-core / LP / tri)
     oriented()         degeneracy-oriented padded adjacency (triangles)
-    bsr(block)         128x128 BSR tiles of M[dst, src] (SpMV backend)
+    bsr(block)         128x128 BSR tiles of M[dst, src] (SpMV pull backend)
+    bsr_t(block)       transpose tiles M[src, dst] (SpMV push backend — the
+                       HITS hub step and every other out-edge reduction)
     tri_triples(block) BSR tile triples for A.(A@A) triangle counting
     chunk_layout_in / chunk_layout_out
                        static chunk structure for the Pallas segment-sum
@@ -67,6 +69,7 @@ class GraphPlan:
     _undirected: Optional[Graph] = field(default=None, repr=False, compare=False)
     _oriented: Optional[Tuple] = field(default=None, repr=False, compare=False)
     _bsr: Dict = field(default_factory=dict, repr=False, compare=False)
+    _bsr_t: Dict = field(default_factory=dict, repr=False, compare=False)
     _tri_triples: Dict = field(default_factory=dict, repr=False, compare=False)
     _chunks_in: Dict = field(default_factory=dict, repr=False, compare=False)
     _chunks_out: Dict = field(default_factory=dict, repr=False, compare=False)
@@ -134,6 +137,24 @@ class GraphPlan:
                                             np.asarray(self.in_dst),
                                             self.n_nodes, block=block)
         return self._bsr[block]
+
+    def bsr_t(self, block: int = DEFAULT_BLOCK
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
+        """Transpose BSR tiles: M[src, dst] (the push/SpMV layout).
+
+        ``engine.push(x, "sum")`` is ``y[u] = Σ_{u→v} x[v]`` — an SpMV with
+        the edge matrix oriented source-major.  Without these tiles the
+        "bsr" backend silently fell back to XLA for every push (the HITS hub
+        step, SCC's backward pass); with them the push takes the same MXU
+        path as the pull.
+        """
+        if block not in self._bsr_t:
+            from ..kernels.ops import edges_to_bsr
+            # edges_to_bsr(a, b) builds M[b, a]: pass (dst, src) for M[src, dst]
+            self._bsr_t[block] = edges_to_bsr(np.asarray(self.out_dst),
+                                              np.asarray(self.out_src),
+                                              self.n_nodes, block=block)
+        return self._bsr_t[block]
 
     def tri_triples(self, block: int = DEFAULT_BLOCK
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:

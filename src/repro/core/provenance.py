@@ -1,0 +1,514 @@
+"""Provenance layer — op recording, script export, replay (Ringo §2.1/§4).
+
+Ringo's front end is *interactive*: an analyst iterates trial-and-error over
+named tables and graphs, and every derived object silently accumulates
+metadata about how it was built, so a finished exploration can be exported as
+a runnable script (the paper's §4 demo: "Ringo can export the sequence of
+commands as a standalone Python program").  This module is that layer for the
+repro stack:
+
+* every tracked operation (relational ops, table↔graph conversions, graph
+  functional updates, algorithms) appends a :class:`ProvRecord` to the
+  objects it produces — op name, named inputs (as *version tokens*), literal
+  params, output version token(s);
+* :func:`version_of` hands out a stable per-object version token (``t3`` /
+  ``g7`` / ``a12``).  Objects are immutable and functional updates return
+  fresh objects, so a version token also keys result caching — the same
+  contract as the identity-memoized ``Graph.plan()`` cache;
+* :func:`export_script` emits a runnable Python script reproducing an object
+  (roots embedded as literals, or taken as function arguments);
+* :func:`replay` re-executes a record chain in-process against fresh root
+  inputs.
+
+Implementation notes.  Tracking is *reentrancy-guarded*: while a tracked op
+runs, nested tracked calls (``bfs`` → ``sssp``, ``unique`` → ``group_by``)
+record nothing, so chains stay at user-call granularity.  Records ride on the
+objects themselves (``Table``/``Graph`` take a dynamic attribute; ``jax.Array``
+outputs go through a weakref side table).  Provenance is attached eagerly but
+never crosses a ``jit`` boundary: a pytree-reconstructed object is a fresh
+root, exactly like its plan cache.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import threading
+import weakref
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
+
+import numpy as np
+
+__all__ = [
+    "ProvRecord",
+    "ProvenanceError",
+    "Opaque",
+    "track",
+    "record_call",
+    "records_of",
+    "version_of",
+    "roots_of",
+    "object_for_version",
+    "canonical_value",
+    "canonical_params",
+    "contains_opaque",
+    "export_script",
+    "replay",
+    "register_op",
+]
+
+
+class ProvenanceError(RuntimeError):
+    """Raised when a chain cannot be exported or replayed."""
+
+
+class Opaque:
+    """Placeholder for a parameter that has no literal form (big arrays,
+    callables...).  Hashable by identity, so a cache key containing one
+    simply never hits; export/replay refuse it with a clear error."""
+
+    __slots__ = ("desc",)
+
+    def __init__(self, desc: str):
+        self.desc = desc
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<opaque {self.desc}>"
+
+
+@dataclass(frozen=True)
+class ProvRecord:
+    """One executed operation: how some object(s) came to be.
+
+    ``inputs`` are (param_name, version_token) pairs in signature order;
+    ``params`` are (param_name, canonical_literal) pairs; ``outputs`` are the
+    version token(s) of the produced value(s) (len > 1 for tuple-returning
+    ops like ``hits``).
+    """
+
+    op: str
+    inputs: Tuple[Tuple[str, str], ...]
+    params: Tuple[Tuple[str, Any], ...]
+    outputs: Tuple[str, ...]
+
+
+# ---------------------------------------------------------------------------
+# version tokens + record attachment (attribute first, weakref side table
+# for objects that refuse attributes, e.g. jax.Array)
+# ---------------------------------------------------------------------------
+
+_LOCK = threading.RLock()
+_COUNTER = itertools.count(1)
+_SIDE_VERSIONS: Dict[int, str] = {}
+_SIDE_RECORDS: Dict[int, Tuple[ProvRecord, ...]] = {}
+# version token -> weakref (or pinned object), for export_script root
+# embedding; a small strong ring pins attr-less objects without weakref
+# support (prevents id-reuse aliasing).
+_BY_VERSION: Dict[str, Any] = {}
+_PINNED = object()  # marker: object lives in _STRONG_RING
+_STRONG_RING: "OrderedDict[int, Any]" = OrderedDict()
+_STRONG_CAP = 4096
+
+
+def _try_setattr(obj: Any, name: str, value: Any) -> bool:
+    try:
+        object.__setattr__(obj, name, value)
+        return True
+    except (AttributeError, TypeError):
+        return False
+
+
+def _side_put(store: Dict[int, Any], obj: Any, value: Any) -> None:
+    key = id(obj)
+    store[key] = value
+    try:
+        weakref.finalize(obj, store.pop, key, None)
+    except TypeError:
+        # no weakref support: pin the object so its id cannot be reused
+        _STRONG_RING[key] = obj
+        while len(_STRONG_RING) > _STRONG_CAP:
+            old_key, _ = _STRONG_RING.popitem(last=False)
+            store.pop(old_key, None)
+
+
+def _kind_prefix(obj: Any) -> str:
+    from .graph import Graph
+    from .table import Table
+    if isinstance(obj, Table):
+        return "t"
+    if isinstance(obj, Graph):
+        return "g"
+    if isinstance(obj, (np.ndarray,)) or hasattr(obj, "dtype"):
+        return "a"
+    return "v"
+
+
+def version_of(obj: Any) -> str:
+    """Stable version token for ``obj``, assigned on first use.
+
+    Objects are immutable and updates are functional, so identity == version;
+    a fresh object (e.g. from ``Graph.add_edges``) gets a fresh token — the
+    provenance dual of the plan-cache invalidation-by-construction contract.
+    """
+    with _LOCK:
+        v = getattr(obj, "_prov_version", None)
+        if v is None:
+            v = _SIDE_VERSIONS.get(id(obj))
+        if v is not None:
+            return v
+        v = f"{_kind_prefix(obj)}{next(_COUNTER)}"
+        if not _try_setattr(obj, "_prov_version", v):
+            _side_put(_SIDE_VERSIONS, obj, v)
+        try:
+            _BY_VERSION[v] = weakref.ref(obj, lambda _, v=v: _BY_VERSION.pop(v, None))
+        except TypeError:
+            # no weakref support: the object is either attr-carrying (rare)
+            # or already pinned in the strong ring by _side_put
+            _BY_VERSION[v] = (_PINNED, obj)
+        return v
+
+
+def object_for_version(version: str) -> Optional[Any]:
+    """Live object for a version token, if it is still alive."""
+    ref = _BY_VERSION.get(version)
+    if ref is None:
+        return None
+    if isinstance(ref, tuple) and ref[0] is _PINNED:
+        return ref[1]
+    return ref()
+
+
+def records_of(obj: Any) -> Tuple[ProvRecord, ...]:
+    """Full provenance chain of ``obj`` (empty tuple for root objects)."""
+    recs = getattr(obj, "_prov_records", None)
+    if recs is None:
+        recs = _SIDE_RECORDS.get(id(obj), ())
+    return recs
+
+
+def _attach_records(obj: Any, records: Tuple[ProvRecord, ...]) -> None:
+    if not _try_setattr(obj, "_prov_records", records):
+        _side_put(_SIDE_RECORDS, obj, records)
+
+
+def _is_tracked(obj: Any) -> bool:
+    from .graph import Graph
+    from .table import Table
+    return isinstance(obj, (Table, Graph)) or bool(records_of(obj))
+
+
+# ---------------------------------------------------------------------------
+# parameter canonicalization (hashable literals -> cache keys + script text)
+# ---------------------------------------------------------------------------
+
+_MAX_EMBED = 256  # arrays up to this many elements become literals
+
+
+def canonical_value(v: Any) -> Any:
+    """Hashable canonical form of a parameter value.
+
+    Scalars pass through; sequences/mappings become tagged tuples; small
+    arrays become ``("array", dtype, shape, values)`` literals; everything
+    else collapses to an :class:`Opaque` sentinel.
+    """
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, np.ndarray) or (hasattr(v, "dtype") and hasattr(v, "shape")):
+        arr = np.asarray(v)
+        if arr.ndim == 0:
+            return arr.item()
+        if arr.size <= _MAX_EMBED:
+            return ("array", str(arr.dtype), tuple(arr.shape),
+                    tuple(arr.reshape(-1).tolist()))
+        return Opaque(f"array{tuple(arr.shape)}:{arr.dtype}")
+    if isinstance(v, (list, tuple)):
+        return ("tuple", tuple(canonical_value(x) for x in v))
+    if isinstance(v, Mapping):
+        return ("dict", tuple((str(k), canonical_value(x)) for k, x in v.items()))
+    return Opaque(type(v).__name__)
+
+
+def canonical_params(params: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple((k, canonical_value(v)) for k, v in params.items())
+
+
+def contains_opaque(canon: Any) -> bool:
+    if isinstance(canon, Opaque):
+        return True
+    if isinstance(canon, tuple):
+        return any(contains_opaque(x) for x in canon)
+    return False
+
+
+def _uncanonical(v: Any) -> Any:
+    """Canonical literal -> live value (for replay)."""
+    if isinstance(v, Opaque):
+        raise ProvenanceError(f"cannot replay opaque parameter {v!r}")
+    if isinstance(v, tuple) and v and v[0] == "array":
+        import jax.numpy as jnp
+        _, dtype, shape, vals = v
+        return jnp.asarray(np.asarray(vals, dtype=dtype).reshape(shape))
+    if isinstance(v, tuple) and v and v[0] == "tuple":
+        return tuple(_uncanonical(x) for x in v[1])
+    if isinstance(v, tuple) and v and v[0] == "dict":
+        return {k: _uncanonical(x) for k, x in v[1]}
+    return v
+
+
+def _literal(v: Any) -> str:
+    """Canonical literal -> python source text (for export_script)."""
+    if isinstance(v, Opaque):
+        raise ProvenanceError(f"cannot export opaque parameter {v!r}")
+    if isinstance(v, tuple) and v and v[0] == "array":
+        _, dtype, shape, vals = v
+        return (f"jnp.asarray(np.asarray({list(vals)!r}, "
+                f"dtype={dtype!r}).reshape({tuple(shape)!r}))")
+    if isinstance(v, tuple) and v and v[0] == "tuple":
+        inner = ", ".join(_literal(x) for x in v[1])
+        comma = "," if len(v[1]) == 1 else ""
+        return f"({inner}{comma})"
+    if isinstance(v, tuple) and v and v[0] == "dict":
+        inner = ", ".join(f"{k!r}: {_literal(x)}" for k, x in v[1])
+        return "{" + inner + "}"
+    return repr(v)
+
+
+# ---------------------------------------------------------------------------
+# op registry + tracking decorator
+# ---------------------------------------------------------------------------
+
+# op name -> (callable, script expression path e.g. "R.select")
+_OPS: Dict[str, Tuple[Callable, str]] = {}
+_LOCAL = threading.local()
+
+
+def register_op(op: str, fn: Callable, script: str) -> None:
+    _OPS[op] = (fn, script)
+
+
+def record_call(op: str, tracked: Sequence[Tuple[str, Any]],
+                params: Mapping[str, Any] | Tuple[Tuple[str, Any], ...],
+                out: Any, multi_output: Optional[bool] = None) -> ProvRecord:
+    """Manually append a :class:`ProvRecord` for an executed op.
+
+    ``tracked`` is (param_name, input_object) in call order; ``params`` holds
+    the remaining literal parameters.  Input chains merge (deduplicated by
+    output token, order-preserving) and the new record is appended to the
+    chain attached to ``out`` (each element, if the op returns a tuple).
+
+    Used directly by the service's fusion scheduler, which executes one
+    batched engine call but must give every per-request slice the provenance
+    of the equivalent single-source call.
+    """
+    if multi_output is None:
+        multi_output = isinstance(out, tuple)
+    canon = params if isinstance(params, tuple) else canonical_params(params)
+    inputs = tuple((name, version_of(objx)) for name, objx in tracked)
+    outs = tuple(out) if multi_output else (out,)
+    outputs = tuple(version_of(o) for o in outs)
+    rec = ProvRecord(op=op, inputs=inputs, params=canon, outputs=outputs)
+    chain: List[ProvRecord] = []
+    seen: set = set()
+    for _, objx in tracked:
+        for r in records_of(objx):
+            if r.outputs not in seen:
+                seen.add(r.outputs)
+                chain.append(r)
+    chain.append(rec)
+    for o in outs:
+        _attach_records(o, tuple(chain))
+    return rec
+
+
+def track(op: str, script: str) -> Callable:
+    """Decorator: register ``fn`` as op ``op`` and record each top-level call.
+
+    Nested tracked calls (one tracked op implemented via another) record
+    nothing — the reentrancy guard keeps chains at user-call granularity.
+    ``script`` is the expression path used by :func:`export_script`
+    (e.g. ``"R.select"``); it must resolve under the standard script header.
+    """
+    def deco(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if getattr(_LOCAL, "depth", 0):
+                return fn(*args, **kwargs)
+            _LOCAL.depth = 1
+            try:
+                out = fn(*args, **kwargs)
+            finally:
+                _LOCAL.depth = 0
+            try:
+                bound = sig.bind(*args, **kwargs)
+                bound.apply_defaults()
+            except TypeError:  # pragma: no cover - fn would have raised too
+                return out
+            tracked_in: List[Tuple[str, Any]] = []
+            params: List[Tuple[str, Any]] = []
+            for name, val in bound.arguments.items():
+                if _is_tracked(val):
+                    tracked_in.append((name, val))
+                else:
+                    params.append((name, canonical_value(val)))
+            record_call(op, tracked_in, tuple(params), out)
+            return out
+
+        register_op(op, wrapper, script)
+        return wrapper
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+
+
+def roots_of(records: Sequence[ProvRecord]) -> Tuple[str, ...]:
+    """Version tokens consumed but never produced by ``records`` (in order)."""
+    produced = {v for r in records for v in r.outputs}
+    roots: List[str] = []
+    for r in records:
+        for _, ver in r.inputs:
+            if ver not in produced and ver not in roots:
+                roots.append(ver)
+    return tuple(roots)
+
+
+def replay(records: Sequence[ProvRecord], inputs: Mapping[str, Any]):
+    """Re-execute a record chain against fresh root inputs.
+
+    ``inputs`` maps root version tokens (see :func:`roots_of`) to objects.
+    Returns the value of the final record (a tuple if it had multiple
+    outputs).  Replayed objects get fresh provenance of their own.
+    """
+    env: Dict[str, Any] = dict(inputs)
+    out: Any = None
+    for r in records:
+        if r.op not in _OPS:
+            raise ProvenanceError(f"unknown op {r.op!r} in record chain")
+        fn, _ = _OPS[r.op]
+        kwargs: Dict[str, Any] = {}
+        for name, ver in r.inputs:
+            if ver not in env:
+                raise ProvenanceError(
+                    f"replay missing input {ver!r} for op {r.op!r}; "
+                    f"provide it via inputs= (roots: {roots_of(records)})")
+            kwargs[name] = env[ver]
+        for name, val in r.params:
+            kwargs[name] = _uncanonical(val)
+        out = fn(**kwargs)
+        if len(r.outputs) > 1:
+            for ver, o in zip(r.outputs, out):
+                env[ver] = o
+        else:
+            env[r.outputs[0]] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# script export (the paper's §4 "export the analysis as a program")
+# ---------------------------------------------------------------------------
+
+_SCRIPT_HEADER = '''\
+"""Auto-exported provenance script (Ringo §4: an interactive analysis,
+replayable as a standalone program).  Run with PYTHONPATH=<repo>/src."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.table import Table
+from repro.core.graph import Graph
+from repro.core import relational as R
+from repro.core import algorithms as A
+from repro.core import convert as C
+'''
+
+
+def _embed_root(ver: str, obj: Any) -> str:
+    """Literal construction code for a root object (Table/Graph/array)."""
+    from .graph import Graph
+    from .table import Table
+    if isinstance(obj, Table):
+        schema = {n: t for n, t in obj.schema.fields}
+        data = obj.to_pydict()
+        return f"{ver} = Table.from_columns({schema!r}, {data!r})"
+    if isinstance(obj, Graph):
+        s, d = obj.out_edges()
+        src = np.asarray(obj.original_of(s)).tolist()
+        dst = np.asarray(obj.original_of(d)).tolist()
+        return (f"{ver} = Graph.from_edges(np.asarray({src!r}, np.int32), "
+                f"np.asarray({dst!r}, np.int32), dedupe=False)")
+    canon = canonical_value(obj)
+    if contains_opaque(canon):
+        raise ProvenanceError(
+            f"root {ver!r} ({type(obj).__name__}) is too large to embed; "
+            f"use embed_roots=False and pass it to the emitted function")
+    return f"{ver} = {_literal(canon)}"
+
+
+def export_script(obj: Any, *, embed_roots: bool = True,
+                  func_name: str = "rebuild") -> str:
+    """Emit a runnable Python script that rebuilds ``obj`` from its chain.
+
+    With ``embed_roots=True`` root tables/graphs are embedded as literal
+    constructors and the emitted ``rebuild()`` takes no arguments — a fully
+    standalone program.  With ``embed_roots=False`` the roots become the
+    function's parameters (named by version token), for re-running the same
+    analysis against fresh data.
+    """
+    records = records_of(obj)
+    if not records:
+        raise ProvenanceError(
+            "object has no provenance records (is it a root, or did it "
+            "cross a jit boundary?)")
+    target = version_of(obj)
+    roots = roots_of(records)
+    lines: List[str] = [_SCRIPT_HEADER, ""]
+
+    if embed_roots:
+        arg_list = ""
+        body_roots: List[str] = []
+        for ver in roots:
+            root_obj = object_for_version(ver)
+            if root_obj is None:
+                raise ProvenanceError(
+                    f"root object {ver!r} has been garbage-collected; "
+                    f"keep roots alive (e.g. in a Workspace) or use "
+                    f"embed_roots=False")
+            body_roots.append("    " + _embed_root(ver, root_obj))
+    else:
+        arg_list = ", ".join(roots)
+        body_roots = []
+
+    lines.append(f"def {func_name}({arg_list}):")
+    lines.extend(body_roots)
+    for r in records:
+        if r.op not in _OPS:
+            raise ProvenanceError(f"unknown op {r.op!r} in record chain")
+        _, path = _OPS[r.op]
+        kwargs = [f"{name}={ver}" for name, ver in r.inputs]
+        kwargs += [f"{name}={_literal(val)}" for name, val in r.params]
+        targets = ", ".join(r.outputs)
+        lines.append(f"    {targets} = {path}({', '.join(kwargs)})")
+    lines.append(f"    return {target}")
+    lines.append("")
+    lines.append("")
+    lines.append('if __name__ == "__main__":')
+    if embed_roots:
+        lines.append(f"    print({func_name}())")
+    else:
+        msg = f"pass roots {', '.join(roots)} to {func_name}()"
+        lines.append(f"    raise SystemExit({msg!r})")
+    lines.append("")
+    return "\n".join(lines)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .provenance import track
 from .table import FLOAT, INT, STR, Schema, Table, next_capacity
 
 __all__ = [
@@ -66,12 +67,14 @@ def _predicate_mask(t: Table, col: str, op: str, value) -> jax.Array:
     return _CMPS[op](arr, jnp.asarray(value, dtype=arr.dtype))
 
 
+@track("relational.select", "R.select")
 def select(t: Table, col: str, op: str, value) -> Table:
     """New table with rows where ``col <op> value`` (paper's Select)."""
     mask = _predicate_mask(t, col, op, value)
     return t.compacted(mask)
 
 
+@track("relational.select_inplace", "R.select_inplace")
 def select_inplace(t: Table, col: str, op: str, value) -> Table:
     """Paper Table 4 benchmarks "select, in place": same storage, compacted.
 
@@ -82,6 +85,7 @@ def select_inplace(t: Table, col: str, op: str, value) -> Table:
     return select(t, col, op, value)
 
 
+@track("relational.project", "R.project")
 def project(t: Table, cols: Sequence[str]) -> Table:
     schema = t.schema.project(cols)
     columns = {c: t.columns[c] for c in cols}
@@ -108,6 +112,7 @@ def _sort_key(t: Table, col: str) -> jax.Array:
     return arr
 
 
+@track("relational.order", "R.order")
 def order(t: Table, cols: Sequence[str], ascending: bool = True) -> Table:
     """Sort rows lexicographically by ``cols`` (paper's Order)."""
     keys = [_sort_key(t, c) for c in reversed(cols)]  # lexsort: last primary
@@ -171,6 +176,7 @@ def _expand_matches(lo: jax.Array, cnt: jax.Array, r_perm: jax.Array, out_cap: i
     return jnp.where(valid, li, 0), jnp.where(valid, ri, 0)
 
 
+@track("relational.join", "R.join")
 def join(lt: Table, rt: Table, lcol: str, rcol: str,
          suffixes: Tuple[str, str] = ("_1", "_2")) -> Table:
     """Equi-join (paper's Join): sort-merge, parallel and contention-free.
@@ -223,6 +229,7 @@ def join(lt: Table, rt: Table, lcol: str, rcol: str,
 _AGGS = ("sum", "min", "max", "count", "mean", "first")
 
 
+@track("relational.group_by", "R.group_by")
 def group_by(t: Table, key: str, aggs: Dict[str, Tuple[str, str]]) -> Table:
     """Group rows by ``key``; ``aggs`` maps out_col -> (in_col, agg).
 
@@ -284,6 +291,7 @@ def group_by(t: Table, key: str, aggs: Dict[str, Tuple[str, str]]) -> Table:
                  n_valid=n_groups, dicts=dicts, next_row_id=n_groups)
 
 
+@track("relational.unique", "R.unique")
 def unique(t: Table, col: str) -> Table:
     """Distinct values of one column (sorted)."""
     return group_by(t, col, {})
@@ -307,16 +315,19 @@ def _set_op(lt: Table, rt: Table, col: str, mode: str) -> Table:
     raise ValueError(mode)
 
 
+@track("relational.intersect", "R.intersect")
 def intersect(lt: Table, rt: Table, col: str) -> Table:
     """Rows of ``lt`` whose key appears in ``rt`` (semi-join)."""
     return _set_op(lt, rt, col, "intersect")
 
 
+@track("relational.difference", "R.difference")
 def difference(lt: Table, rt: Table, col: str) -> Table:
     """Rows of ``lt`` whose key does NOT appear in ``rt`` (anti-join)."""
     return _set_op(lt, rt, col, "difference")
 
 
+@track("relational.union", "R.union")
 def union(lt: Table, rt: Table) -> Table:
     """Row union (concatenate; schemas must match by name/type)."""
     if lt.schema.names != rt.schema.names:
@@ -355,6 +366,7 @@ def union(lt: Table, rt: Table) -> Table:
 # ---------------------------------------------------------------------------
 
 
+@track("relational.sim_join", "R.sim_join")
 def sim_join(lt: Table, rt: Table, lcol: str, rcol: str, threshold: float,
              suffixes: Tuple[str, str] = ("_1", "_2")) -> Table:
     """Join rows with |l - r| <= threshold on numeric columns.
@@ -381,6 +393,7 @@ def sim_join(lt: Table, rt: Table, lcol: str, rcol: str, threshold: float,
 # ---------------------------------------------------------------------------
 
 
+@track("relational.next_k", "R.next_k")
 def next_k(t: Table, key: str, time_col: str, k: int,
            suffixes: Tuple[str, str] = ("_1", "_2")) -> Table:
     """Join each record with its next ``k`` successors within the same key.

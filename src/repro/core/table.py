@@ -47,9 +47,13 @@ INT = "int"
 FLOAT = "float"
 STR = "str"
 
-_DTYPE_FOR = {INT: jnp.int64, FLOAT: jnp.float32, STR: jnp.int32}
-# We run with x64 disabled by default; int columns are int32 on-device.
-_DTYPE_FOR_32 = {INT: jnp.int32, FLOAT: jnp.float32, STR: jnp.int32}
+# INT columns are explicitly int32: we run with x64 disabled, and an int64
+# entry here would be a lie — jnp.asarray(..., dtype=int64) silently
+# truncates to int32 under the default config (with a warning in some JAX
+# versions).  Declaring int32 makes the on-device dtype the declared dtype;
+# int round-trip safety is asserted in tests/test_table.py.
+_DTYPE_FOR = {INT: jnp.int32, FLOAT: jnp.float32, STR: jnp.int32}
+_DTYPE_FOR_32 = _DTYPE_FOR  # alias retained for older call sites
 
 ColumnType = str
 
@@ -207,6 +211,16 @@ class Table:
     @property
     def capacity(self) -> int:
         return int(self.row_ids.shape[0])
+
+    @property
+    def version(self) -> str:
+        """Provenance version token (see :mod:`repro.core.provenance`).
+
+        Tables are value-immutable (ops return new tables), so the token is
+        a stable cache key for any result derived from this table.
+        """
+        from .provenance import version_of
+        return version_of(self)
 
     def __len__(self) -> int:
         return self.n_valid

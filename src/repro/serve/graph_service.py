@@ -1,0 +1,462 @@
+"""Interactive graph-analytics service (Ringo §2.1/§4) over the engine.
+
+Ringo's defining claim is not just fast algorithms but an *interactive
+system*: many analysts iterate trial-and-error over named tables and graphs
+held in one big shared memory, and the front end keeps the whole thing
+responsive.  This module is that front end for the repro stack, the layer the
+ROADMAP's "serve heavy multi-user traffic" north star grows from:
+
+    Workspace        named, versioned tables/graphs shared across sessions.
+                     Objects are immutable; ``update`` applies a functional
+                     update and publishes the fresh object (fresh version
+                     token), so the identity-memoized ``Graph.plan()`` cache
+                     and the service result cache invalidate by construction.
+    Session          one analyst's namespace, layered over the workspace.
+                     Local writes (results bound via ``"as"``) never leak to
+                     other sessions until explicitly ``publish``-ed.
+    GraphService     executes declarative requests such as
+                     ``{"op": "pagerank", "graph": "qa", "params": {...}}``
+                     from many concurrent sessions, with two throughput
+                     multipliers:
+
+    * a **fusion scheduler**: concurrent single-source ``bfs`` / ``sssp`` /
+      ``personalized_pagerank`` requests against the same graph version with
+      the same parameters coalesce into ONE vmapped multi-source engine call
+      (the batched fixpoint the algorithms already expose), and the rows
+      scatter back to the individual requests — each with the provenance of
+      the equivalent single-source call, so export/replay are oblivious to
+      fusion;
+    * a **result cache** keyed by ``(object version, op, canonicalized
+      params)``: repeated trial-and-error queries are free until the object
+      changes.  Version tokens come from :mod:`repro.core.provenance`;
+      because updates are functional, a stale hit is impossible.
+
+Requests are submitted with :meth:`GraphService.submit` (returns a
+:class:`Pending`) and executed at the next :meth:`GraphService.flush` — the
+batching window that gives concurrent requests the chance to fuse.
+:meth:`GraphService.execute` is the submit+flush+result convenience for
+sequential use.  All entry points are thread-safe.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import algorithms as A
+from ..core import convert as C
+from ..core import provenance as prov
+from ..core import relational as R
+from ..core.graph import Graph
+from ..core.table import Table
+
+__all__ = ["Workspace", "Session", "GraphService", "Pending", "ServiceError"]
+
+
+class ServiceError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# request vocabulary: op name -> (callable, {request_key: param_name})
+# ---------------------------------------------------------------------------
+
+_OPS: Dict[str, Tuple[Callable, Dict[str, str]]] = {
+    # relational (named inputs: "table" or "left"/"right")
+    "select": (R.select, {"table": "t"}),
+    "select_inplace": (R.select_inplace, {"table": "t"}),
+    "project": (R.project, {"table": "t"}),
+    "order": (R.order, {"table": "t"}),
+    "group_by": (R.group_by, {"table": "t"}),
+    "unique": (R.unique, {"table": "t"}),
+    "join": (R.join, {"left": "lt", "right": "rt"}),
+    "union": (R.union, {"left": "lt", "right": "rt"}),
+    "intersect": (R.intersect, {"left": "lt", "right": "rt"}),
+    "difference": (R.difference, {"left": "lt", "right": "rt"}),
+    "sim_join": (R.sim_join, {"left": "lt", "right": "rt"}),
+    "next_k": (R.next_k, {"table": "t"}),
+    # conversions
+    "to_graph": (C.to_graph, {"table": "t"}),
+    "graph_to_edge_table": (C.graph_to_edge_table, {"graph": "g"}),
+    "graph_to_node_table": (C.graph_to_node_table, {"graph": "g"}),
+    "table_from_map": (C.table_from_map, {"graph": "g", "scores": "scores"}),
+    # algorithms
+    "pagerank": (A.pagerank, {"graph": "g"}),
+    "personalized_pagerank": (A.personalized_pagerank, {"graph": "g"}),
+    "sssp": (A.sssp, {"graph": "g"}),
+    "bfs": (A.bfs, {"graph": "g"}),
+    "hits": (A.hits, {"graph": "g"}),
+    "connected_components": (A.connected_components, {"graph": "g"}),
+    "strongly_connected_components": (A.strongly_connected_components,
+                                      {"graph": "g"}),
+    "k_core": (A.k_core, {"graph": "g"}),
+    "core_numbers": (A.core_numbers, {"graph": "g"}),
+    "label_propagation": (A.label_propagation, {"graph": "g"}),
+    "eigenvector_centrality": (A.eigenvector_centrality, {"graph": "g"}),
+    "closeness_centrality": (A.closeness_centrality, {"graph": "g"}),
+    "triangle_count": (A.triangle_count, {"graph": "g"}),
+    "per_node_triangles": (A.per_node_triangles, {"graph": "g"}),
+    "clustering_coefficient": (A.clustering_coefficient, {"graph": "g"}),
+}
+
+# single-source traversals the scheduler may coalesce into one vmapped call;
+# value = the parameter holding the source vertex
+_FUSABLE: Dict[str, str] = {
+    "bfs": "source",
+    "sssp": "source",
+    "personalized_pagerank": "source",
+}
+_PROV_OP = {"bfs": "algorithms.bfs", "sssp": "algorithms.sssp",
+            "personalized_pagerank": "algorithms.personalized_pagerank"}
+
+
+# ---------------------------------------------------------------------------
+# Workspace — shared named/versioned objects (Ringo's big-memory heap)
+# ---------------------------------------------------------------------------
+
+
+class Workspace:
+    """Named, versioned tables/graphs shared across sessions.
+
+    The workspace owns the long-lived references, which is what makes the
+    identity-memoized caches effective: as long as a graph stays in the
+    workspace, its ``GraphPlan`` (sorted edges, BSR tiles, chunk layouts) and
+    every service-cache entry keyed by its version token stay warm.
+    """
+
+    def __init__(self):
+        self._objs: Dict[str, Any] = {}
+        self._lock = threading.RLock()
+
+    def put(self, name: str, obj: Any) -> str:
+        """Bind ``name`` to ``obj``; returns the object's version token."""
+        with self._lock:
+            self._objs[name] = obj
+            return prov.version_of(obj)
+
+    def get(self, name: str) -> Any:
+        with self._lock:
+            if name not in self._objs:
+                raise KeyError(f"no workspace object {name!r}; "
+                               f"have {sorted(self._objs)}")
+            return self._objs[name]
+
+    def version(self, name: str) -> str:
+        return prov.version_of(self.get(name))
+
+    def update(self, name: str, fn: Callable[[Any], Any]) -> str:
+        """Functional update: bind ``name`` to ``fn(current)``.
+
+        The result is a fresh object with a fresh version token — downstream
+        plan caches and service result caches keyed by the old token simply
+        stop matching (invalidation by construction, never by broadcast).
+
+        ``fn`` runs *outside* the workspace lock (a big-graph rebuild must
+        not stall every other session's reads); concurrent updates to the
+        same name are last-writer-wins, which is safe because both results
+        are fresh immutable objects with fresh versions.
+        """
+        cur = self.get(name)
+        new = fn(cur)
+        with self._lock:
+            self._objs[name] = new
+            return prov.version_of(new)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._objs)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._objs
+
+
+# ---------------------------------------------------------------------------
+# Session — one analyst's namespace over the workspace
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """Per-analyst namespace layered over a shared :class:`Workspace`.
+
+    Reads fall through to the workspace; writes (``put`` and request
+    ``"as"`` bindings) stay session-local until :meth:`publish` — the
+    isolation contract that lets many analysts iterate on the same shared
+    graphs without trampling each other's intermediates.
+    """
+
+    def __init__(self, service: "GraphService", name: str):
+        self.service = service
+        self.name = name
+        self._local: Dict[str, Any] = {}
+        self._lock = threading.RLock()
+
+    # -- namespace ----------------------------------------------------------
+    def put(self, name: str, obj: Any) -> str:
+        with self._lock:
+            self._local[name] = obj
+            return prov.version_of(obj)
+
+    def get(self, name: str) -> Any:
+        with self._lock:
+            if name in self._local:
+                return self._local[name]
+        return self.service.workspace.get(name)
+
+    def publish(self, name: str) -> str:
+        """Promote a session-local object into the shared workspace."""
+        with self._lock:
+            if name not in self._local:
+                raise KeyError(f"session {self.name!r} has no local object "
+                               f"{name!r}")
+            obj = self._local.pop(name)
+        return self.service.workspace.put(name, obj)
+
+    def local_names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._local)
+
+    # -- execution ----------------------------------------------------------
+    def submit(self, request: Dict[str, Any]) -> "Pending":
+        return self.service.submit(self, request)
+
+    def execute(self, request: Dict[str, Any]) -> Any:
+        return self.service.execute(self, request)
+
+
+# ---------------------------------------------------------------------------
+# Pending — a submitted request's future result
+# ---------------------------------------------------------------------------
+
+
+class Pending:
+    """Handle for a submitted request; resolved at the next service flush."""
+
+    def __init__(self, session: Session, request: Dict[str, Any]):
+        self.session = session
+        self.request = request
+        self.done = False
+        self.value: Any = None
+        self.error: Optional[BaseException] = None
+        self.cached = False
+        self.fused = False
+        self.submitted_at = time.perf_counter()
+        self.completed_at: Optional[float] = None
+        self._event = threading.Event()
+
+    @property
+    def latency_ms(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return (self.completed_at - self.submitted_at) * 1e3
+
+    def _resolve(self, value: Any = None,
+                 error: Optional[BaseException] = None,
+                 cached: bool = False, fused: bool = False) -> None:
+        self.value, self.error = value, error
+        self.cached, self.fused = cached, fused
+        self.completed_at = time.perf_counter()
+        self.done = True
+        self._event.set()
+
+    def result(self) -> Any:
+        if not self.done:
+            self.session.service.flush()
+            # another thread's flush may have claimed this request mid-run
+            self._event.wait()
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+
+# ---------------------------------------------------------------------------
+# GraphService — declarative execution, fusion scheduling, result caching
+# ---------------------------------------------------------------------------
+
+
+class GraphService:
+    """Front end executing declarative requests from concurrent sessions.
+
+    Request shape::
+
+        {"op": "pagerank", "graph": "qa", "params": {"n_iter": 20},
+         "as": "pr"}                    # optional session-local binding
+
+    Named-object slots are op-specific: ``"table"`` / ``"left"`` + ``"right"``
+    for relational ops, ``"graph"`` for conversions and algorithms, plus
+    ``"scores"`` for ``table_from_map``.  Slots resolve session-first, then
+    workspace.  ``params`` holds the remaining literal keyword arguments of
+    the underlying function.
+    """
+
+    def __init__(self, workspace: Optional[Workspace] = None, *,
+                 fuse: bool = True, cache: bool = True,
+                 max_cache_entries: int = 1024):
+        self.workspace = workspace if workspace is not None else Workspace()
+        self.fuse = fuse
+        self.cache_enabled = cache
+        self._cache: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._max_cache = max_cache_entries
+        self._queue: List[Pending] = []
+        self._lock = threading.RLock()
+        self._sessions: Dict[str, Session] = {}
+        self.stats = {"requests": 0, "cache_hits": 0, "cache_misses": 0,
+                      "fused_calls": 0, "fused_requests": 0,
+                      "engine_calls": 0}
+
+    # -- sessions -----------------------------------------------------------
+    def session(self, name: str) -> Session:
+        with self._lock:
+            if name not in self._sessions:
+                self._sessions[name] = Session(self, name)
+            return self._sessions[name]
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, session: Session, request: Dict[str, Any]) -> Pending:
+        op = request.get("op")
+        if op not in _OPS:
+            raise ServiceError(f"unknown op {op!r}; have {sorted(_OPS)}")
+        p = Pending(session, dict(request))
+        with self._lock:
+            self._queue.append(p)
+            self.stats["requests"] += 1
+        return p
+
+    def execute(self, session: Session, request: Dict[str, Any]) -> Any:
+        p = self.submit(session, request)
+        self.flush()
+        return p.result()
+
+    # -- request resolution -------------------------------------------------
+    def _resolve_inputs(self, p: Pending) -> List[Tuple[str, Any]]:
+        """(param_name, object) pairs for the request's named-object slots."""
+        _, slots = _OPS[p.request["op"]]
+        out = []
+        for slot, param in slots.items():
+            if slot not in p.request:
+                raise ServiceError(
+                    f"op {p.request['op']!r} needs a {slot!r} name")
+            out.append((param, p.session.get(p.request[slot])))
+        return out
+
+    def _cache_key(self, op: str, inputs: List[Tuple[str, Any]],
+                   canon: Tuple) -> Optional[Tuple]:
+        if not self.cache_enabled or prov.contains_opaque(canon):
+            return None
+        versions = tuple((name, prov.version_of(obj)) for name, obj in inputs)
+        # order-insensitive: {"a":1,"b":2} and {"b":2,"a":1} are one key
+        return (op, versions, tuple(sorted(canon, key=lambda kv: kv[0])))
+
+    def _cache_get(self, key: Optional[Tuple]):
+        if key is None:
+            return None, False
+        with self._lock:
+            if key in self._cache:
+                self._cache.move_to_end(key)
+                self.stats["cache_hits"] += 1
+                return self._cache[key], True
+            self.stats["cache_misses"] += 1
+            return None, False
+
+    def _cache_put(self, key: Optional[Tuple], value: Any) -> None:
+        if key is None:
+            return
+        with self._lock:
+            self._cache[key] = value
+            while len(self._cache) > self._max_cache:
+                self._cache.popitem(last=False)
+
+    # -- the scheduler ------------------------------------------------------
+    def flush(self) -> None:
+        """Run every queued request: cache lookups, fusion, execution."""
+        with self._lock:
+            batch, self._queue = self._queue, []
+        if not batch:
+            return
+
+        fusable: Dict[Tuple, List[Tuple[Pending, int, Optional[Tuple], Any]]] = {}
+        for p in batch:
+            try:
+                self._dispatch(p, fusable)
+            except Exception as e:  # resolve, don't poison the batch
+                p._resolve(error=e)
+        for group in fusable.values():
+            try:
+                self._run_fused(group)
+            except Exception as e:
+                for p, _, _, _ in group:
+                    p._resolve(error=e)
+
+    def _dispatch(self, p: Pending, fusable: Dict) -> None:
+        op = p.request["op"]
+        fn, _ = _OPS[op]
+        inputs = self._resolve_inputs(p)
+        params = dict(p.request.get("params") or {})
+        canon = prov.canonical_params(params)
+        key = self._cache_key(op, inputs, canon)
+        hit, found = self._cache_get(key)
+        if found:
+            self._finish(p, hit, cached=True)
+            return
+        src_param = _FUSABLE.get(op)
+        source = params.get(src_param) if src_param else None
+        if (self.fuse and src_param
+                and isinstance(source, (int, np.integer))
+                and not isinstance(source, bool)):
+            rest = tuple(sorted(((k, v) for k, v in canon if k != src_param),
+                                key=lambda kv: kv[0]))
+            # carry the resolved graph into the group: re-resolving by name
+            # at fusion time could observe a concurrent workspace update and
+            # cache a different version's result under this version's key
+            gkey = (op, prov.version_of(inputs[0][1]), rest)
+            fusable.setdefault(gkey, []).append((p, source, key,
+                                                 inputs[0][1]))
+            return
+        with self._lock:
+            self.stats["engine_calls"] += 1
+        out = fn(**dict(inputs), **params)
+        self._cache_put(key, out)
+        self._finish(p, out)
+
+    def _run_fused(self, group: List[Tuple[Pending, int, Optional[Tuple], Any]]
+                   ) -> None:
+        """One vmapped multi-source call; scatter rows back per request."""
+        p0 = group[0][0]
+        op = p0.request["op"]
+        fn, _ = _OPS[op]
+        src_param = _FUSABLE[op]
+        g = group[0][3]   # resolved at dispatch: the version the keys name
+        params = dict(p0.request.get("params") or {})
+        params.pop(src_param, None)
+        sources = [s for _, s, _, _ in group]
+        with self._lock:
+            self.stats["engine_calls"] += 1
+            if len(group) > 1:
+                self.stats["fused_calls"] += 1
+                self.stats["fused_requests"] += len(group)
+        if len(group) == 1:
+            out = fn(g, sources[0], **params)
+            self._cache_put(group[0][2], out)
+            self._finish(group[0][0], out)
+            return
+        rows = fn(g, jnp.asarray(sources, dtype=jnp.int32), **params)
+        for i, (p, s, key, _) in enumerate(group):
+            row = rows[i]
+            # the row's provenance is the *single-source* call it stands for —
+            # export/replay must not see the fusion batch
+            prov.record_call(_PROV_OP[op], [("g", g)],
+                             {**params, src_param: s}, row)
+            self._cache_put(key, row)
+            self._finish(p, row, fused=True)
+
+    def _finish(self, p: Pending, value: Any, cached: bool = False,
+                fused: bool = False) -> None:
+        bind = p.request.get("as")
+        if bind:
+            p.session.put(bind, value)
+        p._resolve(value=value, cached=cached, fused=fused)

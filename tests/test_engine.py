@@ -43,7 +43,7 @@ def test_pull_sum_matches_oracle(backend):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_push_sum_matches_oracle(backend):
     g = rmat_graph(seed=2)
     plan = g.plan()
@@ -110,7 +110,7 @@ def test_triangle_count_backend_parity():
     assert A.triangle_count(u, backend="bsr", interpret=True) == ref
 
 
-@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_hits_backend_parity(backend):
     g = rmat_graph(seed=13)
     hub_ref, auth_ref = (np.asarray(x) for x in A.hits(g, n_iter=10,
@@ -161,7 +161,24 @@ def test_plan_caches_undirected_and_oriented():
     assert plan.undirected() is plan.undirected()
     assert plan.oriented() is plan.oriented()
     assert plan.bsr() is plan.bsr()
+    assert plan.bsr_t() is plan.bsr_t()
     assert plan.chunk_layout_in() is plan.chunk_layout_in()
+
+
+def test_bsr_push_uses_transpose_tiles(monkeypatch):
+    """push on "bsr" must take the SpMV path, not fall back to XLA."""
+    g = rmat_graph(seed=43)
+    plan = g.plan()
+    ex = engine.get_exec(plan, "bsr", interpret=True)
+    x = jnp.arange(g.n_nodes, dtype=jnp.float32)
+    want = np.asarray(engine.push(plan, x, "sum", backend="xla"))
+
+    def boom(self, edge_vals, combine="sum"):
+        raise AssertionError("bsr push fell back to the XLA reduction")
+
+    monkeypatch.setattr(engine.XlaExec, "reduce_out", boom)
+    got = np.asarray(ex.push(x, "sum"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
 def test_functional_updates_invalidate_plan():

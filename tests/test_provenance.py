@@ -1,0 +1,178 @@
+"""Provenance layer (core/provenance.py): recording, export, replay.
+
+Covers the Ringo §2.1/§4 contract: every tracked op appends a ProvRecord to
+its outputs, chains merge across multi-input ops, export_script emits a
+standalone program that rebuilds the object bit-for-bit, and replay
+re-executes a chain against fresh roots.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import algorithms as A
+from repro.core import provenance as P
+from repro.core import relational as R
+from repro.core.convert import table_from_map, to_graph
+from repro.core.graph import Graph
+from repro.core.table import INT, STR, Table
+
+
+def posts_table(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table.from_columns(
+        {"id": INT, "ref": INT, "tag": STR},
+        {"id": list(range(n)),
+         "ref": rng.integers(0, n, n).tolist(),
+         "tag": [("java" if i % 3 else "py") for i in range(n)]})
+
+
+# ---------------------------------------------------------------------------
+# recording
+# ---------------------------------------------------------------------------
+
+
+def test_ops_append_records():
+    t = posts_table()
+    s = R.select(t, "tag", "==", "java")
+    recs = P.records_of(s)
+    assert [r.op for r in recs] == ["relational.select"]
+    assert recs[0].inputs == (("t", P.version_of(t)),)
+    assert dict(recs[0].params)["value"] == "java"
+    assert recs[0].outputs == (P.version_of(s),)
+
+
+def test_chains_merge_across_two_input_ops():
+    t = posts_table()
+    a = R.select(t, "tag", "==", "java")
+    b = R.select(t, "tag", "==", "py")
+    j = R.join(a, b, "ref", "id")
+    ops = [r.op for r in P.records_of(j)]
+    assert ops.count("relational.select") == 2
+    assert ops[-1] == "relational.join"
+
+
+def test_nested_tracked_calls_record_once():
+    t = posts_table()
+    u = R.unique(t, "tag")          # unique is implemented via group_by
+    assert [r.op for r in P.records_of(u)] == ["relational.unique"]
+    s = R.select_inplace(t, "tag", "==", "java")   # implemented via select
+    assert [r.op for r in P.records_of(s)] == ["relational.select_inplace"]
+
+
+def test_version_tokens_are_stable_and_fresh_per_object():
+    g = Graph.from_edges([0, 1], [1, 2])
+    assert g.version == g.version
+    g2 = g.add_edges([2], [0])
+    assert g2.version != g.version
+    assert [r.op for r in P.records_of(g2)] == ["graph.add_edges"]
+
+
+def test_algorithm_results_carry_provenance():
+    g = Graph.from_edges([0, 1, 2], [1, 2, 0])
+    pr = A.pagerank(g, n_iter=3)
+    recs = P.records_of(pr)
+    assert recs[-1].op == "algorithms.pagerank"
+    assert dict(recs[-1].params)["n_iter"] == 3
+
+
+def test_tuple_outputs_get_distinct_versions():
+    g = Graph.from_edges([0, 1, 2], [1, 2, 0])
+    hub, auth = A.hits(g, n_iter=3)
+    rh, ra = P.records_of(hub)[-1], P.records_of(auth)[-1]
+    assert rh == ra and len(rh.outputs) == 2
+    assert P.version_of(hub) != P.version_of(auth)
+    assert set(rh.outputs) == {P.version_of(hub), P.version_of(auth)}
+
+
+# ---------------------------------------------------------------------------
+# export_script → exec → identical results (the §4 demo feature)
+# ---------------------------------------------------------------------------
+
+
+def _expert_pipeline(t):
+    qa = R.join(R.select(t, "tag", "==", "java"), t, "ref", "id")
+    g = to_graph(qa, "id_1", "id_2")
+    pr = A.pagerank(g, n_iter=10)
+    return g, table_from_map(g, pr, "node", "score")
+
+
+def test_export_script_round_trips_identically():
+    t = posts_table()
+    _, scores = _expert_pipeline(t)
+    script = P.export_script(scores)
+    ns = {}
+    exec(compile(script, "<prov-export>", "exec"), ns)
+    rebuilt = ns["rebuild"]()
+    assert rebuilt.schema.names == scores.schema.names
+    np.testing.assert_array_equal(rebuilt.column_np("node"),
+                                  scores.column_np("node"))
+    np.testing.assert_array_equal(rebuilt.column_np("score"),
+                                  scores.column_np("score"))
+
+
+def test_export_script_with_root_args():
+    t = posts_table()
+    s = R.select(t, "tag", "==", "py")
+    script = P.export_script(s, embed_roots=False)
+    root = P.roots_of(P.records_of(s))[0]
+    assert f"def rebuild({root}):" in script
+    ns = {}
+    exec(compile(script, "<prov-export>", "exec"), ns)
+    rebuilt = ns["rebuild"](t)
+    np.testing.assert_array_equal(rebuilt.column_np("id"), s.column_np("id"))
+
+
+def test_export_refuses_rootless_objects():
+    t = posts_table()
+    with pytest.raises(P.ProvenanceError):
+        P.export_script(t)          # a root has no records
+
+
+# ---------------------------------------------------------------------------
+# replay against fresh inputs
+# ---------------------------------------------------------------------------
+
+
+def test_replay_against_fresh_inputs():
+    t = posts_table(seed=0)
+    _, scores = _expert_pipeline(t)
+    recs = P.records_of(scores)
+    (root,) = P.roots_of(recs)
+    # same input -> identical result
+    same = P.replay(recs, {root: t})
+    np.testing.assert_array_equal(same.column_np("score"),
+                                  scores.column_np("score"))
+    # different input -> the result of running the pipeline on it
+    t2 = posts_table(seed=7)
+    got = P.replay(recs, {root: t2})
+    _, want = _expert_pipeline(t2)
+    np.testing.assert_array_equal(got.column_np("score"),
+                                  want.column_np("score"))
+
+
+def test_replay_missing_root_raises():
+    t = posts_table()
+    s = R.select(t, "tag", "==", "java")
+    with pytest.raises(P.ProvenanceError):
+        P.replay(P.records_of(s), {})
+
+
+# ---------------------------------------------------------------------------
+# canonicalization corner cases
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_small_arrays_round_trip_big_arrays_opaque():
+    small = P.canonical_value(jnp.asarray([1, 2, 3], jnp.int32))
+    assert small[0] == "array" and P.contains_opaque(small) is False
+    big = P.canonical_value(jnp.zeros((100_000,), jnp.float32))
+    assert P.contains_opaque(big)
+
+
+def test_canonical_params_are_hashable_cache_keys():
+    canon = P.canonical_params({"cols": ["a", "b"], "k": 3,
+                                "aggs": {"n": ("id", "count")}})
+    hash(canon)   # must not raise
+    assert canon == P.canonical_params({"cols": ("a", "b"), "k": 3,
+                                        "aggs": {"n": ("id", "count")}})

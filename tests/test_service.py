@@ -1,0 +1,278 @@
+"""Interactive workspace service (serve/graph_service.py).
+
+Covers the Ringo §2.1 serving contract: shared versioned workspace, session
+isolation, declarative execution, the fusion scheduler (concurrent
+single-source traversals -> one vmapped engine call), and the versioned
+result cache (hits until a functional update bumps the version).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import algorithms as A
+from repro.core import provenance as P
+from repro.core.graph import Graph
+from repro.core.table import INT, STR, Table
+from repro.data.rmat import rmat_edges
+from repro.serve.graph_service import (GraphService, ServiceError, Workspace)
+
+
+def rmat_graph(scale=7, edge_factor=4, seed=0):
+    s, d = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
+    return Graph.from_edges(s, d)
+
+
+def make_service(**kw):
+    svc = GraphService(**kw)
+    svc.workspace.put("g", rmat_graph())
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# workspace + sessions
+# ---------------------------------------------------------------------------
+
+
+def test_workspace_put_get_version():
+    ws = Workspace()
+    g = rmat_graph()
+    v = ws.put("g", g)
+    assert ws.get("g") is g
+    assert ws.version("g") == v == g.version
+    with pytest.raises(KeyError):
+        ws.get("nope")
+
+
+def test_workspace_update_is_functional_and_bumps_version():
+    ws = Workspace()
+    ws.put("g", Graph.from_edges([0, 1], [1, 2]))
+    v0 = ws.version("g")
+    v1 = ws.update("g", lambda g: g.add_edges([2], [0]))
+    assert v1 != v0
+    assert ws.get("g").n_edges == 3
+
+
+def test_session_isolation():
+    svc = make_service()
+    s1, s2 = svc.session("alice"), svc.session("bob")
+    s1.put("mine", Table.from_columns({"x": INT}, {"x": [1, 2]}))
+    assert "mine" in s1.local_names()
+    with pytest.raises(KeyError):
+        s2.get("mine")                    # local writes don't leak
+    # "as" bindings are session-local too
+    s1.execute({"op": "pagerank", "graph": "g", "params": {"n_iter": 2},
+                "as": "pr"})
+    with pytest.raises(KeyError):
+        s2.get("pr")
+    # publish promotes to the shared workspace
+    s1.publish("mine")
+    assert s2.get("mine") is svc.workspace.get("mine")
+
+
+def test_sessions_fall_through_to_workspace():
+    svc = make_service()
+    s = svc.session("alice")
+    assert s.get("g") is svc.workspace.get("g")
+
+
+# ---------------------------------------------------------------------------
+# declarative execution
+# ---------------------------------------------------------------------------
+
+
+def test_execute_algorithm_and_table_pipeline():
+    svc = GraphService()
+    t = Table.from_columns(
+        {"u": INT, "v": INT, "tag": STR},
+        {"u": [0, 1, 2, 3], "v": [1, 2, 0, 0], "tag": ["a", "a", "a", "b"]})
+    svc.workspace.put("edges", t)
+    s = svc.session("alice")
+    s.execute({"op": "select", "table": "edges",
+               "params": {"col": "tag", "op": "==", "value": "a"},
+               "as": "sel"})
+    s.execute({"op": "to_graph", "table": "sel",
+               "params": {"src_col": "u", "dst_col": "v"}, "as": "g"})
+    pr = s.execute({"op": "pagerank", "graph": "g",
+                    "params": {"n_iter": 5}, "as": "pr"})
+    want = A.pagerank(s.get("g"), n_iter=5)
+    np.testing.assert_array_equal(np.asarray(pr), np.asarray(want))
+    # the result's provenance chain reaches back to the root table
+    recs = P.records_of(s.get("pr"))
+    assert [r.op for r in recs] == ["relational.select", "convert.to_graph",
+                                    "algorithms.pagerank"]
+
+
+def test_unknown_op_rejected_and_missing_slot_reported():
+    svc = make_service()
+    s = svc.session("alice")
+    with pytest.raises(ServiceError):
+        s.submit({"op": "frobnicate"})
+    p = s.submit({"op": "pagerank"})      # missing "graph" slot
+    svc.flush()
+    with pytest.raises(ServiceError):
+        p.result()
+
+
+# ---------------------------------------------------------------------------
+# fusion scheduler
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["sssp", "bfs", "personalized_pagerank"])
+def test_fused_multi_source_parity_vs_sequential(op):
+    svc = make_service()
+    g = svc.workspace.get("g")
+    sources = [0, 3, 7, 11]
+    pending = [svc.session(f"u{i}").submit(
+        {"op": op, "graph": "g", "params": {"source": s}})
+        for i, s in enumerate(sources)]
+    svc.flush()
+    assert svc.stats["fused_calls"] == 1
+    assert svc.stats["fused_requests"] == len(sources)
+    assert svc.stats["engine_calls"] == 1
+    fn = getattr(A, op)
+    for p, s in zip(pending, sources):
+        got = np.asarray(p.result())
+        assert p.fused
+        np.testing.assert_array_equal(got, np.asarray(fn(g, s)))
+
+
+def test_fused_rows_carry_single_source_provenance():
+    svc = make_service()
+    pending = [svc.session(f"u{i}").submit(
+        {"op": "sssp", "graph": "g", "params": {"source": s}})
+        for i, s in enumerate([2, 5])]
+    svc.flush()
+    for p, s in zip(pending, [2, 5]):
+        rec = P.records_of(p.result())[-1]
+        assert rec.op == "algorithms.sssp"
+        assert dict(rec.params)["source"] == s
+
+
+def test_mixed_params_do_not_fuse_together():
+    svc = make_service()
+    a = svc.session("a").submit({"op": "sssp", "graph": "g",
+                                 "params": {"source": 0}})
+    b = svc.session("b").submit({"op": "personalized_pagerank", "graph": "g",
+                                 "params": {"source": 0, "n_iter": 3}})
+    svc.flush()
+    assert svc.stats["fused_calls"] == 0    # different ops: nothing coalesced
+    assert a.result().shape == b.result().shape
+
+
+def test_fusion_disabled_runs_individually():
+    svc = make_service(fuse=False)
+    pending = [svc.session(f"u{i}").submit(
+        {"op": "sssp", "graph": "g", "params": {"source": s}})
+        for i, s in enumerate([0, 3])]
+    svc.flush()
+    assert svc.stats["fused_calls"] == 0
+    assert svc.stats["engine_calls"] == 2
+    g = svc.workspace.get("g")
+    for p, s in zip(pending, [0, 3]):
+        np.testing.assert_array_equal(np.asarray(p.result()),
+                                      np.asarray(A.sssp(g, s)))
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_on_repeat_and_across_sessions():
+    svc = make_service()
+    req = {"op": "pagerank", "graph": "g", "params": {"n_iter": 4}}
+    r1 = svc.session("a").execute(req)
+    r2 = svc.session("b").execute(dict(req))
+    assert r1 is r2                       # same object: served from cache
+    assert svc.stats["cache_hits"] == 1
+    assert svc.stats["engine_calls"] == 1
+
+
+def test_cache_invalidates_on_functional_update():
+    svc = GraphService()
+    svc.workspace.put("g", Graph.from_edges([0, 1], [1, 2]))
+    req = {"op": "pagerank", "graph": "g", "params": {"n_iter": 4}}
+    s = svc.session("a")
+    r1 = s.execute(req)
+    svc.workspace.update("g", lambda g: g.add_edges([2], [0]))
+    r2 = s.execute(dict(req))
+    assert svc.stats["cache_hits"] == 0   # version bumped: the key changed
+    assert r2 is not r1
+    want = A.pagerank(svc.workspace.get("g"), n_iter=4)
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(want))
+
+
+def test_cached_fused_row_hits_without_engine_call():
+    svc = make_service()
+    req = {"op": "sssp", "graph": "g", "params": {"source": 5}}
+    svc.session("a").execute(req)
+    calls = svc.stats["engine_calls"]
+    out = svc.session("b").execute(dict(req))
+    assert svc.stats["engine_calls"] == calls
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(A.sssp(svc.workspace.get("g"), 5)))
+
+
+def test_cache_disabled_always_recomputes():
+    svc = make_service(cache=False)
+    req = {"op": "pagerank", "graph": "g", "params": {"n_iter": 2}}
+    svc.session("a").execute(req)
+    svc.session("a").execute(dict(req))
+    assert svc.stats["cache_hits"] == 0
+    assert svc.stats["engine_calls"] == 2
+
+
+# ---------------------------------------------------------------------------
+# concurrency smoke: many threads, one batching window
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_submissions_are_safe():
+    svc = make_service()
+    g = svc.workspace.get("g")
+    results = {}
+
+    def worker(i):
+        s = svc.session(f"u{i}")
+        p = s.submit({"op": "bfs", "graph": "g", "params": {"source": i}})
+        results[i] = p
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    svc.flush()
+    for i, p in results.items():
+        np.testing.assert_array_equal(np.asarray(p.result()),
+                                      np.asarray(A.bfs(g, i)))
+
+
+# ---------------------------------------------------------------------------
+# service -> provenance export (the full §4 loop)
+# ---------------------------------------------------------------------------
+
+
+def test_service_results_export_and_rebuild():
+    svc = GraphService()
+    t = Table.from_columns({"u": INT, "v": INT},
+                           {"u": [0, 1, 2, 3, 0], "v": [1, 2, 3, 0, 2]})
+    svc.workspace.put("edges", t)
+    s = svc.session("alice")
+    s.execute({"op": "to_graph", "table": "edges",
+               "params": {"src_col": "u", "dst_col": "v"}, "as": "g"})
+    s.execute({"op": "pagerank", "graph": "g", "params": {"n_iter": 6},
+               "as": "pr"})
+    tbl = s.execute({"op": "table_from_map", "graph": "g", "scores": "pr",
+                     "params": {"key_name": "node", "value_name": "score"},
+                     "as": "ranked"})
+    script = P.export_script(tbl)
+    ns = {}
+    exec(compile(script, "<service-export>", "exec"), ns)
+    rebuilt = ns["rebuild"]()
+    np.testing.assert_array_equal(rebuilt.column_np("score"),
+                                  tbl.column_np("score"))

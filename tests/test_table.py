@@ -36,6 +36,27 @@ def test_capacity_bucketing():
     assert next_capacity(1000) == 1024
 
 
+def test_int_columns_are_int32_and_round_trip():
+    """INT declares int32 explicitly (x64 is disabled; an int64 declaration
+    would silently truncate) and full-range int32 values must round-trip."""
+    from repro.core import table as table_mod
+    assert table_mod._DTYPE_FOR[INT] == np.int32
+
+    hi, lo = np.int32(2**31 - 1), np.int32(-(2**31))
+    vals = [int(hi), int(lo), 0, -1, 123456789]
+    t = Table.from_columns({"x": INT}, {"x": vals})
+    assert t.column("x").dtype == np.int32
+    assert t.column_np("x").tolist() == vals
+    # survives a structural op (gather pads/copies through the same dtype)
+    t2 = t.gathered(np.arange(len(vals), dtype=np.int32), len(vals))
+    assert t2.column("x").dtype == np.int32
+    assert t2.column_np("x").tolist() == vals
+    # with_column_added takes the same canonical dtype
+    t3 = t.with_column_added("y", INT, vals)
+    assert t3.column("y").dtype == np.int32
+    assert t3.column_np("y").tolist() == vals
+
+
 def test_select_eq_string():
     s = R.select(T0, "tag", "==", "java")
     d = s.to_pydict()
