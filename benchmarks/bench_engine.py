@@ -5,6 +5,11 @@ Runs PageRank through the unified traversal engine on an RMAT graph (default
 time plus the one-off plan build cost, so the perf trajectory of the
 plan/engine substrate is tracked across PRs.
 
+Also records dense-vs-frontier BFS latency on a 2^15-node RMAT graph (from
+the max-out-degree source, so the traversal actually covers the giant
+component): the "bfs" block carries ``dense_ms`` / ``frontier_ms`` /
+``speedup`` and ``ci_check.sh`` gates frontier >= 1.5x dense.
+
 The Pallas/BSR backends execute in interpret mode off-TPU, which is a
 correctness emulation, not a speed path — on non-TPU hosts they are measured
 at a reduced scale (recorded in the JSON) to keep the smoke run fast.
@@ -50,12 +55,39 @@ def bench_backend(backend: str, scale: int, edge_factor: int, n_iter: int,
             "pagerank_ms": round(best, 3)}
 
 
+def bench_bfs(scale: int, edge_factor: int, repeats: int) -> dict:
+    """Dense Bellman-Ford vs frontier-sparse BFS on one RMAT graph."""
+    src, dst = rmat_edges(scale, edge_factor=edge_factor, seed=0)
+    g = Graph.from_edges(src, dst)
+    source = int(np.argmax(np.asarray(g.plan().out_deg)))
+
+    def best(backend):
+        A.bfs(g, source, backend=backend).block_until_ready()   # warm/trace
+        b = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            A.bfs(g, source, backend=backend).block_until_ready()
+            b = min(b, (time.perf_counter() - t0) * 1e3)
+        return b
+
+    dense_ms = best("xla")
+    frontier_ms = best("frontier")
+    levels = np.asarray(A.bfs(g, source, backend="frontier"))
+    return {"scale": scale, "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+            "source": source, "reached": int((levels >= 0).sum()),
+            "dense_ms": round(dense_ms, 3),
+            "frontier_ms": round(frontier_ms, 3),
+            "speedup": round(dense_ms / frontier_ms, 3)}
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--scale", type=int, default=16,
                    help="log2 nodes for the native backend run")
     p.add_argument("--interp-scale", type=int, default=9,
                    help="log2 nodes for interpret-mode backends off-TPU")
+    p.add_argument("--bfs-scale", type=int, default=15,
+                   help="log2 nodes for the dense-vs-frontier BFS gate")
     p.add_argument("--edge-factor", type=int, default=8)
     p.add_argument("--n-iter", type=int, default=10)
     p.add_argument("--repeats", type=int, default=3)
@@ -75,6 +107,11 @@ def main():
         print(f"{backend:7s} scale={scale:2d} plan={r['plan_build_ms']:9.2f}ms"
               f" pagerank={r['pagerank_ms']:9.2f}ms"
               f"{'  (interpret)' if r['interpret_mode'] else ''}")
+
+    results["bfs"] = bench_bfs(args.bfs_scale, args.edge_factor, args.repeats)
+    b = results["bfs"]
+    print(f"bfs     scale={b['scale']:2d} dense={b['dense_ms']:9.2f}ms"
+          f" frontier={b['frontier_ms']:9.2f}ms speedup={b['speedup']:.2f}x")
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

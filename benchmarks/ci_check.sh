@@ -9,6 +9,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python benchmarks/bench_engine.py --out BENCH_engine.json "$@"
+# frontier gate: sparse BFS must beat the dense relaxation on 2^15 RMAT
+python - <<'EOF'
+import json
+b = json.load(open("BENCH_engine.json"))["bfs"]
+assert b["speedup"] >= 1.5, \
+    f"frontier BFS speedup {b['speedup']}x < 1.5x gate (dense {b['dense_ms']}ms, " \
+    f"frontier {b['frontier_ms']}ms)"
+print(f"engine gate OK: frontier BFS {b['speedup']}x vs dense")
+EOF
 # interactive service: concurrent-session throughput/latency on 2^15 RMAT,
 # with/without fusion + caching (gate: fused_cached >= 2x sequential)
 python benchmarks/bench_service.py --out BENCH_service.json

@@ -57,6 +57,47 @@ def _exec_for(g: Graph, backend: Optional[str], interpret: Optional[bool]):
     return plan, engine.get_exec(plan, backend, interpret=interpret)
 
 
+def _undirected_presence(g: Graph, u: Graph):
+    """(pos, present): where each g-node lands in the undirected view.
+
+    ``to_undirected`` rebuilds the node set from edge endpoints, so vertices
+    of ``g`` with no non-loop edges are absent from ``u`` — indexing ``u``
+    results by ``u.dense_of`` alone would read a neighbor's slot for them.
+    """
+    orig = g.node_ids[: g.n_nodes]
+    if u.n_nodes == 0:
+        return (jnp.zeros((g.n_nodes,), jnp.int32),
+                jnp.zeros((g.n_nodes,), bool))
+    pos = jnp.clip(u.dense_of(orig), 0, u.n_nodes - 1)
+    return pos, u.node_ids[pos] == orig
+
+
+def _undirected_values_to_g(g: Graph, u: Graph, vals: jax.Array, missing
+                            ) -> jax.Array:
+    """Per-node values on the undirected view -> g's id space."""
+    if g.n_nodes == 0:
+        return vals[:0]
+    pos, present = _undirected_presence(g, u)
+    if u.n_nodes == 0:
+        return jnp.broadcast_to(missing, (g.n_nodes,)).astype(vals.dtype)
+    return jnp.where(present, vals[pos], missing)
+
+
+def _undirected_ids_to_g(g: Graph, u: Graph, labels: jax.Array) -> jax.Array:
+    """Id-valued results (CC/LP labels are u-dense ids) -> g-dense ids.
+
+    Both dense numberings ascend with original id, so the translation is
+    order-preserving and min-id semantics survive; absent vertices (no
+    non-loop edges) label themselves.
+    """
+    own = jnp.arange(g.n_nodes, dtype=jnp.int32)
+    if g.n_nodes == 0 or u.n_nodes == 0:
+        return own
+    pos, present = _undirected_presence(g, u)
+    lab_g = g.dense_of(u.original_of(labels)).astype(jnp.int32)
+    return jnp.where(present, lab_g[pos], own)
+
+
 # ---------------------------------------------------------------------------
 # PageRank (paper Table 3: 2.76 s LiveJournal / 60.5 s Twitter2010, 10 iters)
 # ---------------------------------------------------------------------------
@@ -94,8 +135,15 @@ def _ppr_body(ex, pr, damping, inv_deg, dangling, restart):
     return (1.0 - damping) * restart + damping * (summed + dang * restart)
 
 
+def _ppr_capped_body(ex, st, damping, inv_deg, dangling, restart, cap):
+    """PPR iterate frozen past a per-run round cap (cross-n_iter fusion)."""
+    pr, t = st
+    new = _ppr_body(ex, pr, damping, inv_deg, dangling, restart)
+    return jnp.where(t < cap, new, pr), t + 1
+
+
 @track("algorithms.personalized_pagerank", "A.personalized_pagerank")
-def personalized_pagerank(g: Graph, source, n_iter: int = 10,
+def personalized_pagerank(g: Graph, source, n_iter=10,
                           damping: float = 0.85, *,
                           backend: Optional[str] = None,
                           interpret: Optional[bool] = None) -> jax.Array:
@@ -105,21 +153,37 @@ def personalized_pagerank(g: Graph, source, n_iter: int = 10,
     (a one-hot at the source).  Like :func:`sssp`, ``source`` may be a
     scalar (returns ``(n,)``) or an array of k sources (returns ``(k, n)``,
     batched via ``vmap`` over the engine fixpoint) — the fusion target for
-    the interactive service's scheduler.
+    the interactive service's scheduler.  ``n_iter`` may likewise be a
+    ``(k,)`` array of per-source iteration counts: the batch runs to the
+    max and every row freezes at its own count, exactly matching a
+    standalone run.
     """
     if g.n_nodes == 0:
         return jnp.zeros((0,), jnp.float32)
     plan, ex = _exec_for(g, backend, interpret)
     scalar = np.ndim(source) == 0
     sources = jnp.atleast_1d(jnp.asarray(source, dtype=jnp.int32))
+    args = (jnp.float32(damping), plan.inv_out_deg, plan.dangling)
 
-    def one(s):
-        restart = jnp.zeros((g.n_nodes,), jnp.float32).at[s].set(1.0)
-        return engine.fixpoint(ex, _ppr_body, restart, n_iter=n_iter,
-                               args=(jnp.float32(damping), plan.inv_out_deg,
-                                     plan.dangling, restart))
+    if np.ndim(n_iter) == 0:
+        def one(s):
+            restart = jnp.zeros((g.n_nodes,), jnp.float32).at[s].set(1.0)
+            return engine.fixpoint(ex, _ppr_body, restart, n_iter=int(n_iter),
+                                   args=(*args, restart))
 
-    prs = jax.vmap(one)(sources)
+        prs = jax.vmap(one)(sources)
+    else:
+        caps = _source_caps(sources, n_iter)
+        rounds = int(caps.max()) if caps.size else 0
+
+        def one_capped(s, cap):
+            restart = jnp.zeros((g.n_nodes,), jnp.float32).at[s].set(1.0)
+            out, _ = engine.fixpoint(ex, _ppr_capped_body,
+                                     (restart, jnp.int32(0)), n_iter=rounds,
+                                     args=(*args, restart, cap))
+            return out
+
+        prs = jax.vmap(one_capped)(sources, jnp.asarray(caps))
     return prs[0] if scalar else prs
 
 
@@ -224,13 +288,25 @@ def _cc_body(ex, labels):
 @track("algorithms.connected_components", "A.connected_components")
 def connected_components(g: Graph, *, backend: Optional[str] = None,
                          interpret: Optional[bool] = None) -> jax.Array:
-    """Weakly-connected component labels (min node id in component)."""
+    """Weakly-connected component labels (min node id in component).
+
+    The ``"frontier"`` backend propagates min labels only from vertices
+    whose label changed last round (no pointer jumping, more rounds, far
+    less work per round on sparse graphs); both paths converge to the same
+    unique fixpoint — min dense id per component.
+    """
     u = g.plan().undirected()
-    _, ex = _exec_for(u, backend, interpret)
+    uplan = u.plan()
+    be = engine.select_backend(uplan, backend, op="connected_components")
     labels0 = jnp.arange(u.n_nodes, dtype=jnp.int32)
-    labels = engine.fixpoint(ex, _cc_body, labels0)
-    # map back to g's dense id space (same original ids, maybe different order)
-    return labels[u.dense_of(g.node_ids[: g.n_nodes])]
+    if be == "frontier" and u.n_nodes > 0:
+        labels = engine.frontier_fixpoint(uplan, labels0,
+                                          jnp.ones((u.n_nodes,), bool))
+    else:
+        ex = engine.get_exec(uplan, be, interpret=interpret)
+        labels = engine.fixpoint(ex, _cc_body, labels0)
+    # map back to g's dense id space; isolated vertices label themselves
+    return _undirected_ids_to_g(g, u, labels)
 
 
 # ---------------------------------------------------------------------------
@@ -243,36 +319,106 @@ def _sssp_body(ex, dist, w):
     return jnp.minimum(dist, relaxed)
 
 
+def _sssp_capped_body(ex, st, w, cap):
+    """Relaxation with a per-run round cap threaded through the state.
+
+    Freezing at ``t >= cap`` makes a vmapped batch of runs with *different*
+    caps exact: each row equals a standalone run of ``cap`` rounds — the
+    mechanism behind the service's cross-``n_iter`` fusion.  The round
+    counter itself freezes once the distances converge (a monotone
+    relaxation that didn't change is at its fixpoint), so the
+    until-unchanged driver exits early instead of grinding a
+    convergence-bound cap (|V| for an uncapped fused request) to the end.
+    """
+    dist, t = st
+    relaxed = ex.pull(dist, "min", edge_values=w, edge_op="add")
+    new = jnp.where(t < cap, jnp.minimum(dist, relaxed), dist)
+    return new, jnp.where(engine._changed(dist, new), t + 1, t)
+
+
+def _source_caps(sources, n_iter):
+    """Broadcast a scalar/array round limit to one cap per source."""
+    if n_iter is None:
+        return None
+    return np.broadcast_to(np.atleast_1d(np.asarray(n_iter, np.int32)),
+                           (int(sources.shape[0]),))
+
+
 @track("algorithms.sssp", "A.sssp")
-def sssp(g: Graph, source, weights: Optional[jax.Array] = None, *,
-         backend: Optional[str] = None,
+def sssp(g: Graph, source, weights: Optional[jax.Array] = None,
+         n_iter=None, *, backend: Optional[str] = None,
          interpret: Optional[bool] = None) -> jax.Array:
-    """Single- or multi-source shortest paths (Bellman-Ford relaxation).
+    """Single- or multi-source shortest paths (relaxation to fixpoint).
 
     ``weights`` is per-edge in in-edge order (sorted by dst); defaults to 1.
     ``source`` may be a scalar (returns ``(n,)``) or an array of k sources
     (returns ``(k, n)`` — batched via ``vmap`` over the engine fixpoint, the
     data-parallel dual of SNAP's sequential Dijkstra from Table 6).
+    ``n_iter`` caps relaxation rounds (None = run to convergence); it may be
+    per-source — a ``(k,)`` array of caps — and each row then equals a
+    standalone run with that cap (the service fuses mixed-depth requests
+    this way).
+
+    On the ``"frontier"`` backend the relaxation is frontier-sparse: only
+    out-edges of vertices whose distance changed last round are relaxed,
+    direction-optimizing to a dense pull when the frontier grows large.
+    Results are identical to the dense backends round for round.
     """
-    _, ex = _exec_for(g, backend, interpret)
-    w = jnp.ones((g.n_edges,), jnp.float32) if weights is None \
-        else weights.astype(jnp.float32)
+    plan = g.plan()
     scalar = np.ndim(source) == 0
     sources = jnp.atleast_1d(jnp.asarray(source, dtype=jnp.int32))
+    caps = _source_caps(sources, n_iter)
+    # auto-selection routes only *single-source* runs to the frontier path:
+    # a batch's union frontier densifies fast, and the vmapped dense
+    # fixpoint wins there (explicit backend="frontier" batches still work)
+    auto_op = "sssp" if int(sources.shape[0]) == 1 else None
+    be = engine.select_backend(plan, backend,
+                               op="sssp" if backend is not None else auto_op)
+    w = jnp.ones((g.n_edges,), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
 
-    def one(s):
-        dist0 = jnp.full((g.n_nodes,), _INF).at[s].set(0.0)
-        return engine.fixpoint(ex, _sssp_body, dist0, args=(w,))
+    if be == "frontier" and g.n_nodes > 0:
+        k = int(sources.shape[0])
+        dist0 = jnp.full((k, g.n_nodes), _INF) \
+            .at[jnp.arange(k), sources].set(0.0)
+        mask0 = jnp.zeros((g.n_nodes,), bool).at[sources].set(True)
+        # unweighted runs relax with a broadcast scalar hop (no edge gather)
+        fw = jnp.float32(1.0) if weights is None else w
+        dists = engine.frontier_fixpoint(plan, dist0, mask0, weights=fw,
+                                         caps=caps)
+        return dists[0] if scalar else dists
 
-    dists = jax.vmap(one)(sources)
+    ex = engine.get_exec(plan, be, interpret=interpret)
+    if caps is None:
+        def one(s):
+            dist0 = jnp.full((g.n_nodes,), _INF).at[s].set(0.0)
+            return engine.fixpoint(ex, _sssp_body, dist0, args=(w,))
+
+        dists = jax.vmap(one)(sources)
+    else:
+        rounds = int(caps.max()) if caps.size else 0
+
+        def one_capped(s, cap):
+            dist0 = jnp.full((g.n_nodes,), _INF).at[s].set(0.0)
+            out, _ = engine.fixpoint(ex, _sssp_capped_body,
+                                     (dist0, jnp.int32(0)), max_iter=rounds,
+                                     args=(w, cap))
+            return out
+
+        dists = jax.vmap(one_capped)(sources, jnp.asarray(caps))
     return dists[0] if scalar else dists
 
 
 @track("algorithms.bfs", "A.bfs")
-def bfs(g: Graph, source, *, backend: Optional[str] = None,
+def bfs(g: Graph, source, n_iter=None, *, backend: Optional[str] = None,
         interpret: Optional[bool] = None) -> jax.Array:
-    """BFS levels (unweighted SSSP); -1 for unreachable.  Batched like sssp."""
-    dist = sssp(g, source, backend=backend, interpret=interpret)
+    """BFS levels (unweighted SSSP); -1 for unreachable.  Batched like sssp.
+
+    ``n_iter`` is the depth limit: vertices deeper than ``n_iter`` hops
+    report unreachable, exactly as if the traversal stopped there.
+    """
+    dist = sssp(g, source, n_iter=n_iter, backend=backend,
+                interpret=interpret)
     return jnp.where(jnp.isinf(dist), -1, dist.astype(jnp.int32))
 
 
@@ -296,7 +442,8 @@ def k_core(g: Graph, k: int, *, backend: Optional[str] = None,
     _, ex = _exec_for(u, backend, interpret)
     alive = engine.fixpoint(ex, _k_core_body, jnp.ones((u.n_nodes,), bool),
                             args=(jnp.float32(k),))
-    return alive[u.dense_of(g.node_ids[: g.n_nodes])]
+    # vertices with no non-loop edges have undirected degree 0: in-core iff k<=0
+    return _undirected_values_to_g(g, u, alive, jnp.bool_(k <= 0))
 
 
 @track("algorithms.core_numbers", "A.core_numbers")
@@ -320,7 +467,7 @@ def core_numbers(g: Graph, k_max: Optional[int] = None, *,
         if not bool(jnp.any(alive)):
             break
         core = jnp.where(alive, k, core)
-    return core[u.dense_of(g.node_ids[: g.n_nodes])]
+    return _undirected_values_to_g(g, u, core, jnp.int32(0))
 
 
 # ---------------------------------------------------------------------------
@@ -454,13 +601,24 @@ def _lp_body(ex, lab):
 def label_propagation(g: Graph, n_iter: int = 20, *,
                       backend: Optional[str] = None,
                       interpret: Optional[bool] = None) -> jax.Array:
-    """Community labels by (min-)label propagation on the undirected view."""
+    """Community labels by (min-)label propagation on the undirected view.
+
+    Min-label propagation is a monotone relaxation, so the ``"frontier"``
+    backend path is round-for-round identical to the dense iterate: a
+    vertex whose label did not change has nothing new to propagate.
+    """
     u = g.plan().undirected()
-    _, ex = _exec_for(u, backend, interpret)
-    lab = engine.fixpoint(ex, _lp_body,
-                          jnp.arange(u.n_nodes, dtype=jnp.int32),
-                          n_iter=n_iter)
-    return lab[u.dense_of(g.node_ids[: g.n_nodes])]
+    uplan = u.plan()
+    be = engine.select_backend(uplan, backend, op="label_propagation")
+    labels0 = jnp.arange(u.n_nodes, dtype=jnp.int32)
+    if be == "frontier" and u.n_nodes > 0:
+        lab = engine.frontier_fixpoint(uplan, labels0,
+                                       jnp.ones((u.n_nodes,), bool),
+                                       caps=n_iter)
+    else:
+        ex = engine.get_exec(uplan, be, interpret=interpret)
+        lab = engine.fixpoint(ex, _lp_body, labels0, n_iter=n_iter)
+    return _undirected_ids_to_g(g, u, lab)
 
 
 @track("algorithms.closeness_centrality", "A.closeness_centrality")

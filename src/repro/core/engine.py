@@ -12,12 +12,14 @@ whole algorithm library):
         v
     core/engine.py      Exec          gather + segment-reduce primitives
         |   push / pull / fixpoint    with *backend dispatch*:
-        |                               "xla"    jax.ops.segment_{sum,min,max}
+        |   frontier_fixpoint           "xla"    jax.ops.segment_{sum,min,max}
         |                               "pallas" kernels/segment_sum one-hot
         |                                        matmul (sum reductions)
         |                               "bsr"    kernels/bsr_spmv MXU SpMV
-        v                                        (fused gather+sum pulls and
-                                                 pushes via transpose tiles)
+        |                                        (fused gather+sum pulls and
+        |                                        pushes via transpose tiles)
+        v                               "frontier" sparse compacted-frontier
+                                                 relaxation (monotone min)
     core/algorithms.py  pagerank, hits, eigenvector_centrality, CC, SCC,
                         sssp/bfs (batched multi-source), k-core, label
                         propagation, triangles — thin compositions over the
@@ -36,10 +38,30 @@ until the state stops changing.  Bodies must be module-level functions
 (the jitted runner is cached per body); per-call parameters go through
 ``args`` so they are traced, not baked into the compile cache.
 
-Backends that cannot serve a request (min/max or integer sums on "pallas",
-weighted, batched or integer pulls/pushes on "bsr") transparently fall back
+``frontier_fixpoint`` is the sparse dual of ``fixpoint`` for **monotone
+min-relaxations** (BFS / SSSP / min-label propagation): instead of relaxing
+every edge each round, it keeps a compacted index array of the vertices
+whose value changed last round (padded to a bucketed power of two so jit
+re-traces are bounded by log2 n), gathers only their adjacency slices from
+the plan's CSR offsets, and scatter-mins candidates into the state.  When
+the frontier's out-edge count grows past a fraction of |E| it
+direction-optimizes into a dense pull over all in-edges (Beamer-style
+push/pull switch), which is round-for-round identical to the sparse push
+for monotone relaxations — so backend choice never changes results.
+
+Backend/primitive support matrix (unsupported cells transparently fall back
 to the XLA primitives, so backend choice never changes semantics — only
-speed.
+speed):
+
+    backend    pull/push sum      min/max     weighted    batched   frontier
+    "xla"      segment reduce     yes         yes         yes       —
+    "pallas"   one-hot matmul     fallback    yes (f32)   fallback  —
+    "bsr"      MXU SpMV           fallback    fallback    fallback  —
+    "frontier" fallback (xla)     fallback    —           —         sparse
+
+``select_backend(plan, backend, op=...)`` resolves op/backend combinations:
+ops outside a backend's support set (``_FRONTIER_OPS`` for "frontier")
+resolve to "xla" instead of failing.
 """
 
 from __future__ import annotations
@@ -57,16 +79,33 @@ from ..kernels.bsr_spmv import bsr_spmv
 from ..kernels.ops import auto_interpret
 from ..kernels.segment_sum import (DEFAULT_BLOCK, DEFAULT_CHUNK,
                                    segment_sum_chunked)
+from .table import next_capacity
 
 __all__ = ["BACKENDS", "select_backend", "get_exec", "push", "pull",
-           "fixpoint", "XlaExec", "PallasExec", "BsrExec"]
+           "fixpoint", "frontier_fixpoint", "XlaExec", "PallasExec",
+           "BsrExec", "FrontierExec"]
 
-BACKENDS = ("xla", "pallas", "bsr")
+BACKENDS = ("xla", "pallas", "bsr", "frontier")
 
 # Auto-selection thresholds: below them the re-blocked kernels cannot beat
 # plain segment reductions (tile/chunk padding dominates).
 _PALLAS_MIN_EDGES = 1 << 16
 _BSR_MAX_NODES = 1 << 14  # tiles are dense 128x128: only small/dense graphs
+# below this the frontier path's per-round host sync outweighs the saved
+# edge relaxations (measured ~1.9x dense at 2^15 nodes / 2^18 edges on CPU)
+_FRONTIER_MIN_EDGES = 1 << 15
+# ops auto-routed to "frontier" on large graphs.  Deliberately narrower than
+# _FRONTIER_OPS: batched multi-source runs (the fusion scheduler's case)
+# union their frontiers and lose the sparsity win to the vmapped dense
+# fixpoint, so algorithms only pass these op tags for single-source calls;
+# CC's dense body pointer-jumps (O(log n) rounds vs frontier's O(diameter)),
+# so it is frontier-only on request
+_FRONTIER_AUTO_OPS = frozenset({"bfs", "sssp"})
+
+# ops with a sparse monotone-relaxation formulation the frontier path serves;
+# anything else on "frontier" resolves to "xla" (same results, dense speed)
+_FRONTIER_OPS = frozenset({"bfs", "sssp", "connected_components",
+                           "label_propagation"})
 
 _REDUCERS = {
     "sum": jax.ops.segment_sum,
@@ -75,15 +114,33 @@ _REDUCERS = {
 }
 
 
-def select_backend(plan, backend: Optional[str] = None) -> str:
-    """Resolve the backend: per-call override > env var > device/size auto."""
+def backend_supports(backend: str, op: Optional[str]) -> bool:
+    """Whether ``backend`` has a dedicated path for ``op`` (None = generic)."""
+    if backend == "frontier" and op is not None:
+        return op in _FRONTIER_OPS
+    return True
+
+
+def select_backend(plan, backend: Optional[str] = None,
+                   op: Optional[str] = None) -> str:
+    """Resolve the backend: per-call override > env var > device/size auto.
+
+    ``op`` (an algorithm name) gates op-aware fallback: a resolved backend
+    without a dedicated path for that op — e.g. ``"frontier"`` asked to run
+    ``"pagerank"``, which has no sparse monotone formulation — resolves to
+    ``"xla"`` so the call succeeds with identical results.
+    """
     if backend is not None:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
-        return backend
+        return backend if backend_supports(backend, op) else "xla"
     env = os.environ.get("REPRO_ENGINE_BACKEND")
     if env:
-        return select_backend(plan, env)
+        return select_backend(plan, env, op)
+    # sparse-traversal ops on large graphs: the frontier path wins on any
+    # device (it relaxes only active edges instead of all of them)
+    if op in _FRONTIER_AUTO_OPS and plan.n_edges >= _FRONTIER_MIN_EDGES:
+        return "frontier"
     if jax.default_backend() == "tpu":
         if plan.n_nodes <= _BSR_MAX_NODES and plan.n_edges >= _PALLAS_MIN_EDGES:
             return "bsr"
@@ -280,6 +337,33 @@ class BsrExec(XlaExec):
         return self._spmv(self.tiles_t, self.rows_t, self.cols_t, x)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class FrontierExec(XlaExec):
+    """CSR-slice gathers for the sparse frontier path.
+
+    Generic ``pull``/``push`` inherit the XLA reductions (the automatic
+    fallback for ops without a sparse formulation); the frontier-specific
+    state lives in the trimmed CSR offset arrays consumed by
+    :func:`frontier_fixpoint`'s push step and in ``w_perm``, the
+    in-order→out-order weight permutation.
+    """
+
+    out_ptr: jax.Array = None    # (n+1,) trimmed row pointers
+    adj: jax.Array = None        # capacity-padded out-neighbor array
+    deg_pad: jax.Array = None    # (n+1,) out-degrees, sentinel row n = 0
+    w_perm: jax.Array = None     # (E,) in-order position of each out-order edge
+
+    def tree_flatten(self):
+        return ((self.in_src, self.in_dst, self.out_src, self.out_dst,
+                 self.out_ptr, self.adj, self.deg_pad, self.w_perm),
+                (self.n_nodes, self.n_edges))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux, *leaves)
+
+
 # ---------------------------------------------------------------------------
 # exec construction (cached on the plan)
 # ---------------------------------------------------------------------------
@@ -291,6 +375,8 @@ def get_exec(plan, backend: Optional[str] = None, *,
              chunk: int = DEFAULT_CHUNK) -> XlaExec:
     """Backend Exec for a :class:`GraphPlan`, memoized on the plan."""
     backend = select_backend(plan, backend)
+    if plan.n_nodes == 0:
+        backend = "xla"   # degenerate: the re-blocked kernels have no rows
     interp = auto_interpret(interpret)
     key = (backend, interp, block, chunk)
     ex = plan.execs.get(key)
@@ -300,6 +386,9 @@ def get_exec(plan, backend: Optional[str] = None, *,
             plan.out_src, plan.out_dst)
     if backend == "xla":
         ex = XlaExec(*base)
+    elif backend == "frontier":
+        ptr, idx, deg_pad = plan.csr_out()
+        ex = FrontierExec(*base, ptr, idx, deg_pad, plan.in_perm_out())
     elif backend == "pallas":
         p_chunk, p_slot, p_lids, p_blk, nb_in, _ = plan.chunk_layout_in(chunk)
         q_chunk, q_slot, q_lids, q_blk, nb_out, _ = plan.chunk_layout_out(chunk)
@@ -397,3 +486,160 @@ def fixpoint(plan_or_exec, body: Callable, init, *,
         return _runner(body, True)(ex, init, jnp.int32(n_iter), *args)
     cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
     return _runner(body, False)(ex, init, jnp.int32(cap), *args)
+
+
+# ---------------------------------------------------------------------------
+# frontier fixpoint driver — sparse monotone min-relaxation
+# ---------------------------------------------------------------------------
+
+# direction-optimization switch: dense pull once the frontier's out-edges
+# exceed |E| / _DENSE_EDGE_DIV (Beamer-style; the dense round costs ~|E|,
+# the sparse round costs ~frontier edges plus compaction)
+_DENSE_EDGE_DIV = 4
+_MIN_BUCKET = 16
+
+
+def _stats_of(mask, deg):
+    """(frontier size, frontier out-edge count) — the host's planning pair."""
+    return jnp.stack([jnp.sum(mask.astype(jnp.int32)),
+                      jnp.sum(jnp.where(mask, deg, 0)).astype(jnp.int32)])
+
+
+def _frontier_round_out(ex, state, new, caps, t):
+    """Shared step epilogue: freeze capped rows, next mask + its stats.
+
+    The (frontier size, frontier out-edge count) pair the host needs to
+    plan the next round is computed inside the same jitted step, so each
+    round costs one dispatch and one scalar fetch.
+    """
+    new = jnp.where((t < caps)[:, None], new, state)
+    mask = jnp.any(new < state, axis=0)
+    return new, mask, _stats_of(mask, ex.deg_pad[: ex.n_nodes])
+
+
+@functools.partial(jax.jit, static_argnames=("e_budget",))
+def _frontier_push_step(ex, state, f_idx, w_out, caps, t, *, e_budget):
+    """One sparse push round over the compacted frontier.
+
+    ``f_idx`` is the frontier padded with the sentinel vertex ``n`` (degree
+    0 in ``deg_pad``, so pad slots own no edge lanes); ``e_budget`` is the
+    static edge-lane count (bucketed power of two >= frontier out-edges).
+    Each lane finds its owning frontier slot by prefix-sum search, gathers
+    the neighbor from the plan CSR, and scatter-mins ``state[u] (+ w)``
+    into the neighbor's column.  Rows with ``t >= caps`` are frozen (the
+    per-request depth limits of fused service batches).
+    """
+    n = ex.n_nodes
+    deg = ex.deg_pad[f_idx]
+    off = ex.out_ptr[f_idx]
+    cum = jnp.cumsum(deg) - deg                           # exclusive prefix
+    total = jnp.sum(deg)
+    j = jnp.arange(e_budget, dtype=deg.dtype)
+    owner = jnp.clip(jnp.searchsorted(cum, j, side="right") - 1,
+                     0, f_idx.shape[0] - 1)
+    valid = j < total
+    pos = jnp.clip(off[owner] + (j - cum[owner]), 0, ex.adj.shape[0] - 1)
+    v = jnp.where(valid, ex.adj[pos], n)                  # pad -> sentinel col
+    u = jnp.minimum(f_idx[owner], n - 1)
+    cand = state[:, u]
+    if w_out is not None:
+        # scalar = uniform edge weight (BFS hops); array = per-edge, already
+        # re-keyed to out order
+        cand = cand + (w_out if w_out.ndim == 0 else w_out[pos])
+    new = jnp.pad(state, ((0, 0), (0, 1))).at[:, v].min(cand)[:, :n]
+    return _frontier_round_out(ex, state, new, caps, t)
+
+
+@jax.jit
+def _frontier_dense_step(ex, state, w_in, caps, t):
+    """One dense pull round (the direction-optimized big-frontier path).
+
+    Round-for-round identical to the sparse push: for a monotone min
+    relaxation, re-relaxing an edge whose source did not change last round
+    is a no-op (its contribution is already in the state).
+    """
+    def one(s):
+        ev = s[ex.in_src]
+        if w_in is not None:
+            ev = ev + w_in          # scalar hop or per-edge (in-order) array
+        return jax.ops.segment_min(ev, ex.in_dst, num_segments=ex.n_nodes,
+                                   indices_are_sorted=True)
+
+    # single-row runs skip vmap batching overhead (the common service case)
+    relaxed = one(state[0])[None] if state.shape[0] == 1 \
+        else jax.vmap(one)(state)
+    new = jnp.minimum(state, relaxed)
+    return _frontier_round_out(ex, state, new, caps, t)
+
+
+_frontier_stats = jax.jit(_stats_of)   # round-0 entry; later rounds get
+                                       # stats fused into their step
+
+
+def frontier_fixpoint(plan_or_exec, init, frontier, *,
+                      weights: Optional[jax.Array] = None,
+                      caps=None, max_rounds: Optional[int] = None):
+    """Sparse monotone min-relaxation to fixpoint (BFS/SSSP/min-label).
+
+    Iterates ``state[v] <- min(state[v], min over frontier in-neighbors u of
+    state[u] (+ w(u, v)))`` where the frontier is the set of vertices whose
+    value changed last round, until the frontier empties (or a round bound).
+    The frontier is kept *compacted* — an index array padded to a bucketed
+    power of two, so jit re-traces are bounded by log2 n — and each round
+    relaxes only the outgoing edges of frontier vertices, switching to a
+    dense pull over all edges when the frontier exceeds ``|E| / 4``.
+
+    ``init`` is ``(n,)`` or batched ``(k, n)``; ``frontier`` a ``(n,)`` bool
+    mask seeding round 0 (for batched runs: the union over rows).
+    ``weights`` is per-edge in in-edge order (the sssp convention) and is
+    re-keyed to CSR push order via the plan's cached permutation.  ``caps``
+    (scalar or ``(k,)``) freezes row ``i`` after ``caps[i]`` rounds — the
+    exact equivalent of running that row alone for ``caps[i]`` iterations.
+
+    The host drives the loop (frontier sizes are data-dependent); state and
+    mask stay on device, with one scalar fetch per round.
+    """
+    ex = (plan_or_exec if isinstance(plan_or_exec, FrontierExec)
+          else get_exec(plan_or_exec, "frontier"))
+    state = jnp.asarray(init)
+    batched = state.ndim == 2
+    if not batched:
+        state = state[None, :]
+    k, n = state.shape
+    if n == 0 or k == 0 or ex.n_edges == 0:
+        return jnp.asarray(init)   # no edges: nothing can relax
+    w_in = w_out = None
+    if weights is not None:
+        w_in = jnp.asarray(weights)
+        # scalars broadcast (no per-edge gather); arrays re-key to out order
+        w_out = w_in if w_in.ndim == 0 else w_in[ex.w_perm]
+    big = np.iinfo(np.int32).max
+    if caps is None:
+        caps_np = np.full((k,), big, np.int64)
+    else:
+        caps_np = np.broadcast_to(
+            np.atleast_1d(np.asarray(caps, dtype=np.int64)), (k,))
+    caps_arr = jnp.asarray(np.minimum(caps_np, big).astype(np.int32))
+    bound = int(min(caps_np.max(), big if max_rounds is None else max_rounds))
+
+    mask = jnp.asarray(frontier, bool)
+    stats = _frontier_stats(mask, ex.deg_pad[:-1])
+    t = 0
+    while t < bound:
+        cnt, fe = (int(x) for x in np.asarray(stats))   # one fetch per round
+        if cnt == 0:
+            break
+        tj = jnp.int32(t)
+        if fe * _DENSE_EDGE_DIV >= ex.n_edges:
+            state, mask, stats = _frontier_dense_step(ex, state, w_in,
+                                                      caps_arr, tj)
+        else:
+            b = min(next_capacity(cnt, minimum=_MIN_BUCKET),
+                    next_capacity(max(n, 1)))
+            f_idx = jnp.nonzero(mask, size=b, fill_value=n)[0].astype(jnp.int32)
+            eb = next_capacity(max(fe, 1), minimum=_MIN_BUCKET)
+            state, mask, stats = _frontier_push_step(ex, state, f_idx, w_out,
+                                                     caps_arr, tj,
+                                                     e_budget=eb)
+        t += 1
+    return state if batched else state[0]

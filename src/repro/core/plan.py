@@ -21,6 +21,13 @@ Lazily built and cached on first use:
 
     undirected()       symmetrized simple-graph view (CC / k-core / LP / tri)
     oriented()         degeneracy-oriented padded adjacency (triangles)
+    csr_out()          trimmed out-CSR (ptr, idx, deg_pad) — the frontier
+                       backend's push-side gather: adjacency slices of only
+                       the active vertices (sparse BFS/SSSP)
+    csr_in()           trimmed in-CSR, the pull-side dual
+    in_perm_out()      permutation taking in-edge-order per-edge values
+                       (the sssp weight convention) to out-edge order, so
+                       the frontier push relaxes with the same weights
     bsr(block)         128x128 BSR tiles of M[dst, src] (SpMV pull backend)
     bsr_t(block)       transpose tiles M[src, dst] (SpMV push backend — the
                        HITS hub step and every other out-edge reduction)
@@ -68,6 +75,10 @@ class GraphPlan:
     execs: Dict = field(default_factory=dict, repr=False, compare=False)
     _undirected: Optional[Graph] = field(default=None, repr=False, compare=False)
     _oriented: Optional[Tuple] = field(default=None, repr=False, compare=False)
+    _csr_out: Optional[Tuple] = field(default=None, repr=False, compare=False)
+    _csr_in: Optional[Tuple] = field(default=None, repr=False, compare=False)
+    _in_perm_out: Optional[jax.Array] = field(default=None, repr=False,
+                                              compare=False)
     _bsr: Dict = field(default_factory=dict, repr=False, compare=False)
     _bsr_t: Dict = field(default_factory=dict, repr=False, compare=False)
     _tri_triples: Dict = field(default_factory=dict, repr=False, compare=False)
@@ -127,6 +138,51 @@ class GraphPlan:
             nbr = nbr.at[s_sorted, slot].set(d_sorted)
             self._oriented = (osrc, odst, nbr, odeg.astype(jnp.int32))
         return self._oriented
+
+    def csr_out(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Out-CSR for frontier gathers: ``(ptr, idx, deg_pad)``.
+
+        ``ptr`` is the trimmed ``(n+1,)`` row-pointer prefix (``ptr[n]`` is
+        the edge count), ``idx`` the capacity-padded neighbor array, and
+        ``deg_pad`` an ``(n+1,)`` degree vector whose sentinel row ``n``
+        (the frontier pad vertex) has degree 0 — padded frontier slots
+        contribute no edges.
+        """
+        if self._csr_out is None:
+            g, n = self.graph, self.n_nodes
+            deg_pad = jnp.concatenate(
+                [self.out_deg, jnp.zeros((1,), self.out_deg.dtype)])
+            self._csr_out = (g.out_ptr[: n + 1], g.out_idx, deg_pad)
+        return self._csr_out
+
+    def csr_in(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """In-CSR ``(ptr, idx, deg_pad)`` — the pull-side frontier dual.
+
+        Reserved for a sparse *pull* phase (gathering in-edges of only the
+        unsettled vertices); today's direction-optimized dense pull reduces
+        over the sorted edge arrays directly, so nothing in the engine
+        consumes this yet.
+        """
+        if self._csr_in is None:
+            g, n = self.graph, self.n_nodes
+            deg_pad = jnp.concatenate(
+                [self.in_deg, jnp.zeros((1,), self.in_deg.dtype)])
+            self._csr_in = (g.in_ptr[: n + 1], g.in_idx, deg_pad)
+        return self._csr_in
+
+    def in_perm_out(self) -> jax.Array:
+        """Permutation ``p`` with ``w_out = w_in[p]``.
+
+        Per-edge values follow the sssp convention (in-edge order, sorted by
+        dst); the frontier push walks out-edge CSR order (sorted by src).
+        ``p[j]`` is the in-order position of the j-th out-order edge, so one
+        gather re-keys weights once per call.
+        """
+        if self._in_perm_out is None:
+            # sorting the in-order edge list by (src, dst) yields out order
+            self._in_perm_out = jnp.lexsort((self.in_dst, self.in_src)) \
+                .astype(jnp.int32)
+        return self._in_perm_out
 
     def bsr(self, block: int = DEFAULT_BLOCK
             ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:

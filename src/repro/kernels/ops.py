@@ -59,7 +59,10 @@ def edges_to_bsr(src: np.ndarray, dst: np.ndarray, n: int,
     dst = np.asarray(dst, dtype=np.int64)
     vals = np.ones_like(src, dtype=np.float32) if values is None \
         else np.asarray(values, dtype=np.float32)
-    nb = (n + block - 1) // block
+    # nb >= 1 even for empty graphs: the "every row block appears" pass then
+    # emits one zero tile, so the SpMV kernel grid is never empty (the
+    # degenerate dual of build_block_triples' non-empty-grid guard)
+    nb = max((n + block - 1) // block, 1)
     rb, cb = dst // block, src // block
     key = rb * nb + cb
     uniq, inv = np.unique(key, return_inverse=True)

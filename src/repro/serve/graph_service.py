@@ -113,6 +113,14 @@ _FUSABLE: Dict[str, str] = {
 }
 _PROV_OP = {"bfs": "algorithms.bfs", "sssp": "algorithms.sssp",
             "personalized_pagerank": "algorithms.personalized_pagerank"}
+# cross-n_iter fusion: requests differing only in n_iter coalesce; the batch
+# runs to the max cap and each row freezes at its own (the capped fixpoint
+# bodies in core/algorithms.py).  Value = the cap standing in for an absent
+# n_iter: ppr's iterative default; None for the traversals, resolved per
+# graph to |V| (that many relaxation rounds always converge BFS/SSSP).
+_FUSE_DEPTH_DEFAULT: Dict[str, Optional[int]] = {
+    "bfs": None, "sssp": None, "personalized_pagerank": 10,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -389,7 +397,7 @@ class GraphService:
             try:
                 self._run_fused(group)
             except Exception as e:
-                for p, _, _, _ in group:
+                for p, *_ in group:
                     p._resolve(error=e)
 
     def _dispatch(self, p: Pending, fusable: Dict) -> None:
@@ -405,17 +413,23 @@ class GraphService:
             return
         src_param = _FUSABLE.get(op)
         source = params.get(src_param) if src_param else None
+        n_iter = params.get("n_iter")
         if (self.fuse and src_param
                 and isinstance(source, (int, np.integer))
-                and not isinstance(source, bool)):
-            rest = tuple(sorted(((k, v) for k, v in canon if k != src_param),
+                and not isinstance(source, bool)
+                and (n_iter is None or (isinstance(n_iter, (int, np.integer))
+                                        and not isinstance(n_iter, bool)))):
+            # n_iter joins source as a per-request coordinate: requests that
+            # differ only in depth still share one fused engine call
+            rest = tuple(sorted(((k, v) for k, v in canon
+                                 if k not in (src_param, "n_iter")),
                                 key=lambda kv: kv[0]))
             # carry the resolved graph into the group: re-resolving by name
             # at fusion time could observe a concurrent workspace update and
             # cache a different version's result under this version's key
             gkey = (op, prov.version_of(inputs[0][1]), rest)
             fusable.setdefault(gkey, []).append((p, source, key,
-                                                 inputs[0][1]))
+                                                 inputs[0][1], n_iter))
             return
         with self._lock:
             self.stats["engine_calls"] += 1
@@ -423,9 +437,15 @@ class GraphService:
         self._cache_put(key, out)
         self._finish(p, out)
 
-    def _run_fused(self, group: List[Tuple[Pending, int, Optional[Tuple], Any]]
-                   ) -> None:
-        """One vmapped multi-source call; scatter rows back per request."""
+    def _run_fused(self, group: List[Tuple[Pending, int, Optional[Tuple],
+                                           Any, Optional[int]]]) -> None:
+        """One vmapped multi-source call; scatter rows back per request.
+
+        Requests in a group share every parameter except ``source`` and
+        ``n_iter``.  Mixed depths run as ONE batch to the max cap with each
+        row frozen at its own — bit-identical to running every request
+        sequentially at its own depth — and rows scatter back per request.
+        """
         p0 = group[0][0]
         op = p0.request["op"]
         fn, _ = _OPS[op]
@@ -433,24 +453,42 @@ class GraphService:
         g = group[0][3]   # resolved at dispatch: the version the keys name
         params = dict(p0.request.get("params") or {})
         params.pop(src_param, None)
-        sources = [s for _, s, _, _ in group]
+        params.pop("n_iter", None)
+        sources = [s for _, s, _, _, _ in group]
+        n_iters = [ni for _, _, _, _, ni in group]
         with self._lock:
             self.stats["engine_calls"] += 1
             if len(group) > 1:
                 self.stats["fused_calls"] += 1
                 self.stats["fused_requests"] += len(group)
         if len(group) == 1:
-            out = fn(g, sources[0], **params)
+            kw = dict(params)
+            if n_iters[0] is not None:
+                kw["n_iter"] = n_iters[0]
+            out = fn(g, sources[0], **kw)
             self._cache_put(group[0][2], out)
             self._finish(group[0][0], out)
             return
-        rows = fn(g, jnp.asarray(sources, dtype=jnp.int32), **params)
-        for i, (p, s, key, _) in enumerate(group):
+        default = _FUSE_DEPTH_DEFAULT[op]
+        if default is None:
+            default = g.n_nodes            # convergence bound for bfs/sssp
+        uniform = len(set(n_iters)) == 1
+        if uniform and n_iters[0] is None:
+            kw = dict(params)              # all-unbounded: plain fused call
+        elif uniform:
+            kw = dict(params, n_iter=n_iters[0])
+        else:
+            caps = [default if ni is None else int(ni) for ni in n_iters]
+            kw = dict(params, n_iter=np.asarray(caps, np.int32))
+        rows = fn(g, jnp.asarray(sources, dtype=jnp.int32), **kw)
+        for i, (p, s, key, _, ni) in enumerate(group):
             row = rows[i]
-            # the row's provenance is the *single-source* call it stands for —
-            # export/replay must not see the fusion batch
-            prov.record_call(_PROV_OP[op], [("g", g)],
-                             {**params, src_param: s}, row)
+            # the row's provenance is the *single-source* call it stands
+            # for — export/replay must not see the fusion batch
+            req_params = {**params, src_param: s}
+            if ni is not None:
+                req_params["n_iter"] = int(ni)
+            prov.record_call(_PROV_OP[op], [("g", g)], req_params, row)
             self._cache_put(key, row)
             self._finish(p, row, fused=True)
 

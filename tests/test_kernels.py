@@ -98,6 +98,16 @@ def test_empty_graph_tricount():
             [0], [1]).to_undirected(), interpret=True) == 0
 
 
+def test_edges_to_bsr_zero_nodes_keeps_grid_nonempty():
+    # n=0 / zero-edge re-blocking must still emit a runnable tile stream
+    e = np.zeros((0,), np.int32)
+    tiles, rows, cols, nb = ops.edges_to_bsr(e, e, 0)
+    assert nb == 1 and tiles.shape[0] == 1 and rows.shape == (1,)
+    y = bsr_spmv(tiles, rows, cols, jnp.zeros((nb, tiles.shape[1])), nb,
+                 interpret=True)
+    assert not np.asarray(y).any()
+
+
 # ---------------------------------------------------------------------------
 # flash attention forward kernel (§Perf follow-up; serving path)
 # ---------------------------------------------------------------------------

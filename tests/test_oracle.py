@@ -1,0 +1,352 @@
+"""Cross-backend differential oracle: NumPy references vs every backend.
+
+The engine contract is that backend choice never changes results — "xla",
+"pallas", "bsr" and the sparse "frontier" path must agree with each other
+AND with an independent pure-NumPy implementation on every graph shape,
+including the degenerate ones (star, path, disconnected with isolated
+vertices, self-loops, zero-edge).  Each algorithm is checked differentially
+over the whole corpus x backend matrix, plus seeded randomized graphs via
+the hypothesis shim.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import algorithms as A
+from repro.core import engine
+from repro.core.graph import Graph
+from repro.data.rmat import rmat_edges
+
+BACKENDS = list(engine.BACKENDS)          # xla, pallas, bsr, frontier
+
+
+# ---------------------------------------------------------------------------
+# the corpus — every entry is (name, graph) with dense ids 0..n-1
+# ---------------------------------------------------------------------------
+
+
+def _zero_edge(n):
+    e = jnp.zeros((0,), jnp.int32)
+    return Graph.from_dense_edges(e, e, n)
+
+
+def _corpus():
+    out = []
+    s, d = rmat_edges(6, edge_factor=4, seed=5)
+    out.append(("rmat", Graph.from_edges(s, d)))
+    n = 33
+    out.append(("star", Graph.from_edges(np.zeros(n - 1, np.int32),
+                                         np.arange(1, n, dtype=np.int32))))
+    out.append(("path", Graph.from_edges(np.arange(0, 40, dtype=np.int32),
+                                         np.arange(1, 41, dtype=np.int32))))
+    # two components + isolated vertices (ids 20..23 have no edges at all)
+    ds, dd = rmat_edges(4, edge_factor=3, seed=9)
+    src = np.concatenate([ds % 8, ds % 6 + 10]).astype(np.int32)
+    dst = np.concatenate([dd % 8, dd % 6 + 10]).astype(np.int32)
+    out.append(("disconnected",
+                Graph.from_dense_edges(jnp.asarray(src), jnp.asarray(dst), 24)))
+    out.append(("self_loop", Graph.from_edges(
+        np.asarray([0, 1, 2, 2, 3], np.int32),
+        np.asarray([0, 2, 2, 3, 1], np.int32))))
+    out.append(("zero_edge", _zero_edge(8)))
+    return out
+
+
+CORPUS = _corpus()
+CASES = [(name, backend) for name, _ in CORPUS for backend in BACKENDS]
+GRAPHS = dict(CORPUS)
+
+
+def edge_list(g):
+    s, d = (np.asarray(a) for a in g.out_edges())
+    return list(zip(s.tolist(), d.tolist()))
+
+
+def undirected_simple(edges):
+    """Symmetrized, deduped, self-loop-free adjacency (to_undirected dual)."""
+    adj = collections.defaultdict(set)
+    for a, b in edges:
+        if a != b:
+            adj[a].add(b)
+            adj[b].add(a)
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# pure-NumPy references
+# ---------------------------------------------------------------------------
+
+
+def np_pagerank(edges, n, n_iter=10, damping=0.85):
+    pr = np.full(n, 1.0 / n, np.float64)
+    outdeg = np.zeros(n)
+    for s, _ in edges:
+        outdeg[s] += 1
+    for _ in range(n_iter):
+        new = np.full(n, (1.0 - damping) / n)
+        new += damping * pr[outdeg == 0].sum() / n
+        for s, t in edges:
+            new[t] += damping * pr[s] / outdeg[s]
+        pr = new
+    return pr
+
+
+def np_bfs(edges, n, source):
+    adj = collections.defaultdict(list)
+    for s, t in edges:
+        adj[s].append(t)
+    level = np.full(n, -1, np.int64)
+    level[source] = 0
+    q = collections.deque([source])
+    while q:
+        u = q.popleft()
+        for v in adj[u]:
+            if level[v] < 0:
+                level[v] = level[u] + 1
+                q.append(v)
+    return level
+
+
+def np_sssp(edges, n, source, w=None):
+    """Bellman-Ford over the edge list (matches the engine's relaxation)."""
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    w = np.ones(len(edges)) if w is None else np.asarray(w, np.float64)
+    for _ in range(max(n, 1)):
+        changed = False
+        for (s, t), wv in zip(edges, w):
+            if dist[s] + wv < dist[t]:
+                dist[t] = dist[s] + wv
+                changed = True
+        if not changed:
+            break
+    return dist
+
+
+def np_connected_components(edges, n):
+    """Min dense id per weakly-connected component (isolated = own id)."""
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in edges:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    return np.asarray([find(i) for i in range(n)])
+
+
+def np_k_core(edges, n, k):
+    """Iterative peeling on the undirected simple view (alive mask)."""
+    adj = undirected_simple(edges)
+    alive = np.ones(n, bool)
+    while True:
+        deg = np.asarray([sum(alive[v] for v in adj[u]) if alive[u] else 0
+                          for u in range(n)])
+        new = alive & (deg >= k)
+        if (new == alive).all():
+            return new
+        alive = new
+
+
+def np_triangle_count(edges, n):
+    adj = undirected_simple(edges)
+    total = 0
+    for u in range(n):
+        for v in adj[u]:
+            if v > u:
+                total += len(adj[u] & adj[v] - {u, v})
+    return total // 3  # each triangle counted once per edge... (u<v per pair)
+
+
+# ---------------------------------------------------------------------------
+# the differential matrix: algorithm x corpus x backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,backend", CASES)
+def test_pagerank_matrix(name, backend):
+    g = GRAPHS[name]
+    got = np.asarray(A.pagerank(g, n_iter=8, backend=backend, interpret=True))
+    want = np_pagerank(edge_list(g), g.n_nodes, n_iter=8)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("name,backend", CASES)
+def test_bfs_matrix(name, backend):
+    g = GRAPHS[name]
+    if g.n_nodes == 0:
+        pytest.skip("bfs needs a source vertex")
+    for source in {0, g.n_nodes // 2, g.n_nodes - 1}:
+        got = np.asarray(A.bfs(g, source, backend=backend, interpret=True))
+        np.testing.assert_array_equal(
+            got, np_bfs(edge_list(g), g.n_nodes, source), err_msg=f"src={source}")
+
+
+@pytest.mark.parametrize("name,backend", CASES)
+def test_sssp_matrix(name, backend):
+    g = GRAPHS[name]
+    if g.n_nodes == 0:
+        pytest.skip("sssp needs a source vertex")
+    edges_in = list(zip(*(np.asarray(a).tolist() for a in g.in_edges()))) \
+        if g.n_edges else []
+    w = np.round(np.random.default_rng(7).uniform(0.5, 4.0, g.n_edges), 1)
+    got = np.asarray(A.sssp(g, 0, weights=jnp.asarray(w, dtype=jnp.float32),
+                            backend=backend, interpret=True))
+    want = np_sssp(edges_in, g.n_nodes, 0, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,backend", CASES)
+def test_connected_components_matrix(name, backend):
+    g = GRAPHS[name]
+    got = np.asarray(A.connected_components(g, backend=backend,
+                                            interpret=True))
+    np.testing.assert_array_equal(
+        got, np_connected_components(edge_list(g), g.n_nodes))
+
+
+@pytest.mark.parametrize("name,backend", CASES)
+def test_k_core_matrix(name, backend):
+    g = GRAPHS[name]
+    for k in (0, 2, 3):
+        got = np.asarray(A.k_core(g, k, backend=backend, interpret=True))
+        np.testing.assert_array_equal(
+            got, np_k_core(edge_list(g), g.n_nodes, k), err_msg=f"k={k}")
+
+
+@pytest.mark.parametrize("name", [name for name, _ in CORPUS])
+@pytest.mark.parametrize("backend", [None, "bsr"])
+def test_triangle_count_matrix(name, backend):
+    # triangle_count exposes the oriented-intersection and MXU-BSR paths
+    # only; "pallas"/"frontier" are rejected by design (covered elsewhere)
+    g = GRAPHS[name]
+    got = A.triangle_count(g.to_undirected() if g.n_edges else g,
+                           backend=backend, interpret=True)
+    assert got == np_triangle_count(edge_list(g), g.n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# sentinel consistency: bfs(-1) and sssp(inf) must mark the same vertices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,backend", CASES)
+def test_unreached_sentinels_consistent(name, backend):
+    g = GRAPHS[name]
+    if g.n_nodes == 0:
+        pytest.skip("needs a source vertex")
+    lev = np.asarray(A.bfs(g, 0, backend=backend, interpret=True))
+    dist = np.asarray(A.sssp(g, 0, backend=backend, interpret=True))
+    np.testing.assert_array_equal(lev < 0, np.isinf(dist))
+    np.testing.assert_array_equal(lev[lev >= 0], dist[lev >= 0])
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized graphs (hypothesis, or its deterministic fallback)
+# ---------------------------------------------------------------------------
+
+
+def _random_graph(n, m, seed):
+    r = np.random.default_rng(seed)
+    if m == 0:
+        return _zero_edge(n)
+    return Graph.from_dense_edges(jnp.asarray(r.integers(0, n, m), jnp.int32),
+                                  jnp.asarray(r.integers(0, n, m), jnp.int32),
+                                  n)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 48), st.integers(0, 160), st.integers(0, 2 ** 20))
+def test_random_graph_bfs_cc_all_backends(n, m, seed):
+    g = _random_graph(n, m, seed)
+    edges = edge_list(g)
+    want_bfs = np_bfs(edges, n, 0)
+    want_cc = np_connected_components(edges, n)
+    for backend in ("xla", "frontier"):
+        np.testing.assert_array_equal(
+            np.asarray(A.bfs(g, 0, backend=backend)), want_bfs)
+        np.testing.assert_array_equal(
+            np.asarray(A.connected_components(g, backend=backend)), want_cc)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 120), st.integers(0, 2 ** 20))
+def test_random_graph_sssp_frontier_vs_dense(n, m, seed):
+    g = _random_graph(n, m, seed)
+    w = jnp.asarray(np.random.default_rng(seed + 1).uniform(0.5, 3.0,
+                                                            g.n_edges),
+                    dtype=jnp.float32)
+    dense = np.asarray(A.sssp(g, 1 % n, weights=w, backend="xla"))
+    sparse = np.asarray(A.sssp(g, 1 % n, weights=w, backend="frontier"))
+    np.testing.assert_array_equal(dense, sparse)
+
+
+# ---------------------------------------------------------------------------
+# regressions for the edge cases the corpus surfaced
+# ---------------------------------------------------------------------------
+
+
+def test_zero_edge_plan_builds_empty_sorted_arrays():
+    # plan construction must survive sorting/bincounting 0-length edge arrays
+    plan = _zero_edge(8).plan()
+    assert plan.in_src.shape == (0,) and plan.out_src.shape == (0,)
+    assert np.asarray(plan.out_deg).sum() == 0
+    ptr, _, deg_pad = plan.csr_out()
+    assert ptr.shape == (9,) and int(ptr[-1]) == 0
+    assert deg_pad.shape == (9,) and int(deg_pad[-1]) == 0
+    assert plan.in_perm_out().shape == (0,)
+    assert plan.oriented()[2].shape[0] == 8   # padded adjacency still built
+
+
+def test_zero_edge_degree_normalization_no_nan():
+    g = _zero_edge(6)
+    pr = np.asarray(A.pagerank(g, n_iter=4))
+    assert np.isfinite(pr).all() and abs(pr.sum() - 1.0) < 1e-5
+    assert np.isfinite(np.asarray(A.clustering_coefficient(g))).all()
+    assert np.asarray(A.degree_centrality(g)).tolist() == [0.0] * 6
+
+
+def test_isolated_vertices_map_back_from_undirected_view():
+    # ids 3 and 4 have no (non-loop) edges: absent from to_undirected()
+    g = Graph.from_dense_edges(jnp.asarray([0, 1, 4], jnp.int32),
+                               jnp.asarray([1, 2, 4], jnp.int32), 5)
+    assert np.asarray(A.connected_components(g)).tolist() == [0, 0, 0, 3, 4]
+    assert np.asarray(A.k_core(g, 1)).tolist() == [True, True, True,
+                                                   False, False]
+    assert np.asarray(A.k_core(g, 0)).tolist() == [True] * 5
+    assert np.asarray(A.core_numbers(g)).tolist() == [1, 1, 1, 0, 0]
+    assert np.asarray(A.label_propagation(g)).tolist() == [0, 0, 0, 3, 4]
+
+
+def test_empty_graph_all_algorithms_degrade():
+    g = Graph.from_edges([], [])
+    assert A.pagerank(g).shape == (0,)
+    assert A.connected_components(g).shape == (0,)
+    assert A.k_core(g, 2).shape == (0,)
+    assert A.triangle_count(g) == 0
+    for backend in BACKENDS:   # kernel backends must not re-block 0 rows
+        assert engine.get_exec(g.plan(), backend,
+                               interpret=True).n_nodes == 0
+
+
+def test_frontier_zero_edge_returns_init_unchanged():
+    g = _zero_edge(5)
+    dist = np.asarray(A.sssp(g, 2, backend="frontier"))
+    want = np.full(5, np.inf)
+    want[2] = 0.0
+    np.testing.assert_array_equal(dist, want)
+    assert np.asarray(A.bfs(g, 2, backend="frontier")).tolist() \
+        == [-1, -1, 0, -1, -1]

@@ -178,6 +178,82 @@ def test_fusion_disabled_runs_individually():
 
 
 # ---------------------------------------------------------------------------
+# cross-n_iter fusion: mixed depth limits coalesce into one engine call
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["bfs", "sssp"])
+def test_mixed_depth_requests_fuse_into_one_call(op):
+    svc = make_service()
+    g = svc.workspace.get("g")
+    cases = [(0, None), (3, 2), (7, 5), (11, None)]
+    pending = [svc.session(f"u{i}").submit(
+        {"op": op, "graph": "g",
+         "params": {"source": s} if d is None
+         else {"source": s, "n_iter": d}})
+        for i, (s, d) in enumerate(cases)]
+    svc.flush()
+    assert svc.stats["fused_calls"] == 1
+    assert svc.stats["fused_requests"] == len(cases)
+    assert svc.stats["engine_calls"] == 1
+    fn = getattr(A, op)
+    for p, (s, d) in zip(pending, cases):
+        want = fn(g, s) if d is None else fn(g, s, n_iter=d)
+        assert p.fused
+        np.testing.assert_array_equal(np.asarray(p.result()),
+                                      np.asarray(want), err_msg=f"{s}/{d}")
+
+
+def test_mixed_depth_ppr_fuses_with_default_n_iter():
+    svc = make_service()
+    g = svc.workspace.get("g")
+    pending = [svc.session(f"u{i}").submit(
+        {"op": "personalized_pagerank", "graph": "g", "params": pr})
+        for i, pr in enumerate([{"source": 1}, {"source": 2, "n_iter": 3}])]
+    svc.flush()
+    assert svc.stats["fused_calls"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(pending[0].result()),
+        np.asarray(A.personalized_pagerank(g, 1)))
+    np.testing.assert_array_equal(
+        np.asarray(pending[1].result()),
+        np.asarray(A.personalized_pagerank(g, 2, n_iter=3)))
+
+
+def test_mixed_depth_rows_carry_per_request_provenance():
+    svc = make_service()
+    pending = [svc.session(f"u{i}").submit(
+        {"op": "bfs", "graph": "g", "params": pr})
+        for i, pr in enumerate([{"source": 2, "n_iter": 4}, {"source": 5}])]
+    svc.flush()
+    rec0 = P.records_of(pending[0].result())[-1]
+    assert dict(rec0.params) == {"source": 2, "n_iter": 4}
+    rec1 = P.records_of(pending[1].result())[-1]
+    assert dict(rec1.params) == {"source": 5}   # no depth limit recorded
+
+
+def test_result_cache_keys_on_per_request_n_iter():
+    svc = make_service()
+    s = svc.session("a")
+    r2 = s.execute({"op": "bfs", "graph": "g",
+                    "params": {"source": 3, "n_iter": 2}})
+    assert svc.stats["cache_hits"] == 0
+    # same source, same depth: a hit, no engine call
+    calls = svc.stats["engine_calls"]
+    r2b = s.execute({"op": "bfs", "graph": "g",
+                     "params": {"source": 3, "n_iter": 2}})
+    assert svc.stats["cache_hits"] == 1
+    assert svc.stats["engine_calls"] == calls
+    assert r2b is r2
+    # same source, different depth: its own key, fresh execution
+    r4 = s.execute({"op": "bfs", "graph": "g",
+                    "params": {"source": 3, "n_iter": 4}})
+    assert svc.stats["engine_calls"] == calls + 1
+    assert r4 is not r2
+    assert int(np.asarray(r4).max()) >= int(np.asarray(r2).max())
+
+
+# ---------------------------------------------------------------------------
 # result cache
 # ---------------------------------------------------------------------------
 
