@@ -1,0 +1,112 @@
+"""Bench regression delta: fresh BENCH_*.json vs the committed baseline.
+
+``ci_check.sh`` snapshots the committed ``BENCH_engine.json`` /
+``BENCH_service.json`` before re-running the benchmarks, then calls this
+script to diff the throughput-bearing metrics:
+
+* engine: per-backend ``pagerank_ms`` and the BFS ``dense_ms`` /
+  ``frontier_ms`` (lower is better);
+* service: per-mode ``qps`` (higher is better).
+
+Every metric present in both files is printed old-vs-new with its relative
+change; any metric more than ``--threshold`` (default 30%) *worse* than the
+baseline fails the check.  Latency percentiles and the overload fairness
+ratio are reported by the benchmarks but deliberately not delta-gated here —
+they have their own absolute gates in ``ci_check.sh`` and are too noisy for
+a tight relative bound.  Metrics that appear or disappear (new benchmark
+blocks, renamed backends) are informational, never failures.
+
+Usage::
+
+    python benchmarks/bench_delta.py --old-dir /tmp/baseline --new-dir . \
+        [--threshold 0.30]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+#: metric -> direction; "lower" = ms-like (regression when it grows),
+#: "higher" = qps-like (regression when it shrinks)
+_FILES = ("BENCH_engine.json", "BENCH_service.json")
+
+
+def _metrics(fname: str, data: dict) -> dict:
+    out = {}
+    if fname == "BENCH_engine.json":
+        for be, blk in (data.get("backends") or {}).items():
+            if "pagerank_ms" in blk:
+                out[f"engine.{be}.pagerank_ms"] = (float(blk["pagerank_ms"]),
+                                                   "lower")
+        for k in ("dense_ms", "frontier_ms"):
+            if k in (data.get("bfs") or {}):
+                out[f"engine.bfs.{k}"] = (float(data["bfs"][k]), "lower")
+    elif fname == "BENCH_service.json":
+        for mode, blk in (data.get("modes") or {}).items():
+            if "qps" in blk:
+                out[f"service.{mode}.qps"] = (float(blk["qps"]), "higher")
+    return out
+
+
+def _load(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--old-dir", required=True,
+                    help="directory holding the committed baseline jsons")
+    ap.add_argument("--new-dir", default=".",
+                    help="directory holding the freshly produced jsons")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="fail when a metric is this fraction worse than "
+                         "the baseline (0.30 = 30%%)")
+    args = ap.parse_args()
+
+    failures = []
+    rows = []
+    for fname in _FILES:
+        old = _metrics(fname, _load(os.path.join(args.old_dir, fname)))
+        new = _metrics(fname, _load(os.path.join(args.new_dir, fname)))
+        for key in sorted(set(old) | set(new)):
+            if key not in old:
+                rows.append((key, None, new[key][0], "new metric (info)"))
+                continue
+            if key not in new:
+                rows.append((key, old[key][0], None, "dropped (info)"))
+                continue
+            ov, direction = old[key]
+            nv, _ = new[key]
+            if ov <= 0:
+                rows.append((key, ov, nv, "no baseline (info)"))
+                continue
+            # "worse" is direction-aware: ms growing / qps shrinking
+            worse = (nv - ov) / ov if direction == "lower" \
+                else (ov - nv) / ov
+            verdict = "OK"
+            if worse > args.threshold:
+                verdict = f"REGRESSION (> {args.threshold:.0%} worse)"
+                failures.append(key)
+            rows.append((key, ov, nv, f"{-worse:+.1%} {verdict}"))
+
+    width = max((len(r[0]) for r in rows), default=10)
+    print(f"bench delta vs committed baseline "
+          f"(threshold {args.threshold:.0%}):")
+    for key, ov, nv, note in rows:
+        o = "-" if ov is None else f"{ov:10.2f}"
+        n = "-" if nv is None else f"{nv:10.2f}"
+        print(f"  {key:<{width}}  old={o:>10}  new={n:>10}  {note}")
+    if failures:
+        print(f"bench delta FAILED: {len(failures)} metric(s) regressed "
+              f"more than {args.threshold:.0%}: {', '.join(failures)}")
+        return 1
+    print("bench delta OK: no metric regressed past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

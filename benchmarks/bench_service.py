@@ -15,10 +15,20 @@ exploration.  The workload runs three ways:
 and records throughput (qps) and per-query p50/p99 latency for each.  The
 accept gate for the service subsystem is fused_cached >= 2x sequential
 throughput on the same workload.
+
+The **overload** block measures the scheduler's admission-control/fair-share
+contract (ISSUE 4): one hostile session floods the service with expensive
+non-fusable queries (held to its in-flight quota by admission control, its
+spillover absorbed as RejectedError+retry-after backoff) while N interactive
+sessions run a closed query loop.  The same workload runs under ``"fifo"``
+(global arrival order — what a naive queue gives you) and ``"fair"``
+(deficit-round-robin charged in engine-ms); the gate asserts interactive p99
+under fair share is >= 3x better than FIFO.
 """
 
 import argparse
 import json
+import threading
 import time
 
 import jax
@@ -26,7 +36,38 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.data.rmat import rmat_edges
-from repro.serve.graph_service import GraphService, Workspace
+from repro.serve.graph_service import (GraphService, RejectedError, Workspace)
+from repro.serve.policy import (AdmissionPolicy, BatchPolicy, FairSharePolicy,
+                                SchedulerPolicy)
+
+
+def pctl(samples, q: float) -> float:
+    """Interpolated percentile (linear between order statistics).
+
+    At small n a naive ``sorted(x)[ceil(q/100*n)-1]`` hands back the single
+    worst outlier for p99 (96 samples -> the max); interpolating at rank
+    ``q/100 * (n-1)`` blends the neighboring order statistics instead, so
+    small-sample p99s estimate the tail rather than copying its extreme.
+    """
+    xs = np.sort(np.asarray(list(samples), dtype=np.float64))
+    if xs.size == 0:
+        return float("nan")
+    if xs.size == 1:
+        return float(xs[0])
+    rank = (q / 100.0) * (xs.size - 1)
+    lo = int(np.floor(rank))
+    hi = min(lo + 1, xs.size - 1)
+    frac = rank - lo
+    return float(xs[lo] * (1.0 - frac) + xs[hi] * frac)
+
+
+def jain_index(xs) -> float:
+    """Jain's fairness index over per-session shares: 1.0 = perfectly even,
+    1/n = one session took everything."""
+    xs = np.asarray(list(xs), dtype=np.float64)
+    if xs.size == 0 or float((xs ** 2).sum()) == 0.0:
+        return 1.0
+    return float(xs.sum() ** 2 / (xs.size * (xs ** 2).sum()))
 
 
 def build_workload(n_sessions: int, n_rounds: int, source_pool: int):
@@ -79,15 +120,128 @@ def run_mode(graph, rounds, n_sessions, *, fuse: bool, cache: bool) -> dict:
         n_queries += len(pending)
     wall_s = time.perf_counter() - t0
 
-    lat = np.asarray(latencies)
     for k in svc.stats:
         svc.stats[k] -= warm_stats[k]
     return {"n_queries": n_queries,
             "wall_s": round(wall_s, 4),
             "qps": round(n_queries / wall_s, 2),
-            "p50_ms": round(float(np.percentile(lat, 50)), 3),
-            "p99_ms": round(float(np.percentile(lat, 99)), 3),
+            "p50_ms": round(pctl(latencies, 50), 3),
+            "p99_ms": round(pctl(latencies, 99), 3),
             "stats": dict(svc.stats)}
+
+
+# ---------------------------------------------------------------------------
+# overload: 1 flooding session vs N interactive, fifo vs fair share
+# ---------------------------------------------------------------------------
+
+
+def run_overload_mode(graph, *, mode: str, n_interactive: int,
+                      queries_per_session: int, flood_quota: int,
+                      source_pool: int = 64) -> dict:
+    """One hostile flooding session vs N closed-loop interactive sessions.
+
+    Fusion and caching are OFF: the comparison isolates *scheduling order*
+    (every query is a real engine call in both modes).  The flood keeps its
+    admission quota saturated with expensive PageRanks; each interactive
+    session serially issues single-source BFS queries and waits.  Reported
+    latencies are interactive submit->resolve times.
+    """
+    ws = Workspace()
+    ws.put("g", graph)
+    policy = SchedulerPolicy(
+        mode=mode,
+        admission=AdmissionPolicy(max_inflight=8,
+                                  inflight_overrides={"flood": flood_quota}),
+        fair=FairSharePolicy(quantum_ms=5.0),
+        batch=BatchPolicy(window_ms=0.0))
+    svc = GraphService(ws, fuse=False, cache=False, policy=policy, workers=1)
+
+    # warmup: compile the two op shapes before any timing (several bfs
+    # sources so the frontier path's size buckets are warm too)
+    warm = svc.session("warm")
+    warm.execute({"op": "pagerank", "graph": "g", "params": {"n_iter": 10}})
+    for s in (0, 7, 19):
+        warm.execute({"op": "bfs", "graph": "g", "params": {"source": s}})
+
+    stop = threading.Event()
+    flood = svc.session("flood")
+    flood_submitted = [0]
+
+    def flood_loop():
+        while not stop.is_set():
+            try:
+                flood.submit({"op": "pagerank", "graph": "g",
+                              "params": {"n_iter": 10}})
+                flood_submitted[0] += 1
+            except RejectedError as e:
+                time.sleep(min(e.retry_after, 0.05))
+
+    lat_by_session = {i: [] for i in range(n_interactive)}
+
+    def interactive_loop(i):
+        sess = svc.session(f"i{i}")
+        for q in range(queries_per_session):
+            src = (q * 13 + i * 5) % source_pool
+            p = sess.submit({"op": "bfs", "graph": "g",
+                             "params": {"source": int(src)}})
+            p.result(timeout=600)
+            lat_by_session[i].append(p.latency_ms)
+
+    flooder = threading.Thread(target=flood_loop, daemon=True)
+    flooder.start()
+    time.sleep(0.4)              # let the flood build its quota-deep backlog
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=interactive_loop, args=(i,),
+                                daemon=True) for i in range(n_interactive)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall_s = time.perf_counter() - t0
+    stop.set()
+    flooder.join(timeout=5)
+    svc.flush()                  # drain the flood's leftover backlog
+    flood_stats = svc.session_stats("flood")
+    svc.close()
+
+    all_lat = [x for lats in lat_by_session.values() for x in lats]
+    per_qps = [len(lats) / wall_s for lats in lat_by_session.values()]
+    return {"wall_s": round(wall_s, 4),
+            "interactive_p50_ms": round(pctl(all_lat, 50), 3),
+            "interactive_p99_ms": round(pctl(all_lat, 99), 3),
+            "per_session_p99_ms": {f"i{i}": round(pctl(lats, 99), 3)
+                                   for i, lats in lat_by_session.items()},
+            "fairness_index": round(jain_index(per_qps), 4),
+            "flood_submitted": flood_submitted[0],
+            "flood_completed": flood_stats["completed"],
+            "flood_rejected": flood_stats["rejected"],
+            "flood_engine_ms": flood_stats["engine_ms"]}
+
+
+def run_overload(scale: int, edge_factor: int, n_interactive: int,
+                 queries_per_session: int, flood_quota: int) -> dict:
+    src, dst = rmat_edges(scale, edge_factor=edge_factor, seed=1)
+    g = Graph.from_edges(src, dst)
+    g.plan()
+    out = {"scale": scale, "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+           "interactive_sessions": n_interactive,
+           "queries_per_session": queries_per_session,
+           "flood_quota": flood_quota, "modes": {}}
+    for mode in ("fifo", "fair"):
+        r = run_overload_mode(g, mode=mode, n_interactive=n_interactive,
+                              queries_per_session=queries_per_session,
+                              flood_quota=flood_quota)
+        out["modes"][mode] = r
+        print(f"overload/{mode:4s}  interactive p50={r['interactive_p50_ms']:8.1f}ms"
+              f"  p99={r['interactive_p99_ms']:8.1f}ms"
+              f"  fairness={r['fairness_index']:.3f}"
+              f"  flood done/rejected={r['flood_completed']}/{r['flood_rejected']}")
+    fifo99 = out["modes"]["fifo"]["interactive_p99_ms"]
+    fair99 = out["modes"]["fair"]["interactive_p99_ms"]
+    out["p99_improvement"] = round(fifo99 / fair99, 2) if fair99 > 0 else 0.0
+    print(f"overload: fair-share interactive p99 {out['p99_improvement']}x "
+          f"better than FIFO")
+    return out
 
 
 def main():
@@ -98,6 +252,13 @@ def main():
     p.add_argument("--sessions", type=int, default=12)
     p.add_argument("--rounds", type=int, default=6)
     p.add_argument("--source-pool", type=int, default=16)
+    p.add_argument("--overload-scale", type=int, default=13,
+                   help="log2 nodes of the overload-mode RMAT graph")
+    p.add_argument("--overload-sessions", type=int, default=8)
+    p.add_argument("--overload-queries", type=int, default=4)
+    p.add_argument("--flood-quota", type=int, default=16,
+                   help="flooding session's in-flight admission quota")
+    p.add_argument("--skip-overload", action="store_true")
     p.add_argument("--out", default="BENCH_service.json")
     args = p.parse_args()
 
@@ -129,6 +290,11 @@ def main():
         results["modes"]["fused_cached"]["qps"] / base, 2)
     print(f"speedup: fused {results['speedup_fused']}x, "
           f"fused+cached {results['speedup_fused_cached']}x vs sequential")
+
+    if not args.skip_overload:
+        results["overload"] = run_overload(
+            args.overload_scale, args.edge_factor, args.overload_sessions,
+            args.overload_queries, args.flood_quota)
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

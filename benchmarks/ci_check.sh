@@ -1,14 +1,38 @@
 #!/usr/bin/env bash
 # Make-free tier-1 gate: full test suite + engine & service perf smoke.
 #
-#   benchmarks/ci_check.sh            # tests + benchmarks -> BENCH_*.json
+#   benchmarks/ci_check.sh            # tests + benchmarks + gates + delta
+#   benchmarks/ci_check.sh --fast     # fast tier: tests only, no benchmarks
 #   benchmarks/ci_check.sh --scale 12 # extra args forwarded to bench_engine
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAST=0
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --fast) FAST=1 ;;
+    *) ARGS+=("$a") ;;
+  esac
+done
+
 python -m pytest -x -q
-python benchmarks/bench_engine.py --out BENCH_engine.json "$@"
+if [[ "$FAST" == "1" ]]; then
+  echo "ci_check OK (--fast tier: tests only, benchmarks skipped)"
+  exit 0
+fi
+
+# Snapshot the committed bench numbers before the benchmarks overwrite them:
+# bench_delta.py diffs the fresh run against this baseline at the end.
+BASELINE_DIR="$(mktemp -d)"
+trap 'rm -rf "$BASELINE_DIR"' EXIT
+for f in BENCH_engine.json BENCH_service.json; do
+  [[ -f "$f" ]] && cp "$f" "$BASELINE_DIR/"
+done
+
+python benchmarks/bench_engine.py --out BENCH_engine.json \
+  ${ARGS[@]+"${ARGS[@]}"}
 # frontier gate: sparse BFS must beat the dense relaxation on 2^15 RMAT
 python - <<'EOF'
 import json
@@ -18,8 +42,10 @@ assert b["speedup"] >= 1.5, \
     f"frontier {b['frontier_ms']}ms)"
 print(f"engine gate OK: frontier BFS {b['speedup']}x vs dense")
 EOF
-# interactive service: concurrent-session throughput/latency on 2^15 RMAT,
-# with/without fusion + caching (gate: fused_cached >= 2x sequential)
+# interactive service: concurrent-session throughput/latency on 2^15 RMAT
+# with/without fusion + caching (gate: fused_cached >= 2x sequential), plus
+# the overload run — 1 flooding session vs 8 interactive under fifo vs
+# fair-share scheduling (gate: interactive p99 >= 3x better under fair)
 python benchmarks/bench_service.py --out BENCH_service.json
 python - <<'EOF'
 import json
@@ -27,4 +53,15 @@ r = json.load(open("BENCH_service.json"))
 assert r["speedup_fused_cached"] >= 2.0, \
     f"service fused+cached speedup {r['speedup_fused_cached']}x < 2x gate"
 print(f"service gate OK: fused+cached {r['speedup_fused_cached']}x")
+o = r["overload"]
+assert o["p99_improvement"] >= 3.0, \
+    f"overload gate: fair-share interactive p99 only " \
+    f"{o['p99_improvement']}x better than FIFO (< 3x); " \
+    f"fifo={o['modes']['fifo']['interactive_p99_ms']}ms " \
+    f"fair={o['modes']['fair']['interactive_p99_ms']}ms"
+print(f"overload gate OK: fair-share interactive p99 "
+      f"{o['p99_improvement']}x better than FIFO")
 EOF
+# regression delta: fresh numbers vs the committed baseline (>30% fails)
+python benchmarks/bench_delta.py --old-dir "$BASELINE_DIR" --new-dir . \
+  --threshold 0.30

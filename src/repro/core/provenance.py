@@ -37,7 +37,7 @@ import itertools
 import threading
 import weakref
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
@@ -49,6 +49,7 @@ __all__ = [
     "Opaque",
     "track",
     "record_call",
+    "annotate_last",
     "records_of",
     "version_of",
     "roots_of",
@@ -94,6 +95,12 @@ class ProvRecord:
     inputs: Tuple[Tuple[str, str], ...]
     params: Tuple[Tuple[str, Any], ...]
     outputs: Tuple[str, ...]
+    #: execution metadata that is *not* part of the computation — e.g. the
+    #: service scheduler's queueing/coalescing annotations (queued_ms,
+    #: batch size, scheduling mode).  Ignored by export_script and replay:
+    #: two runs of the same analysis are the same program regardless of how
+    #: the scheduler happened to batch them.
+    meta: Tuple[Tuple[str, Any], ...] = ()
 
 
 # ---------------------------------------------------------------------------
@@ -296,13 +303,16 @@ def register_op(op: str, fn: Callable, script: str) -> None:
 
 def record_call(op: str, tracked: Sequence[Tuple[str, Any]],
                 params: Mapping[str, Any] | Tuple[Tuple[str, Any], ...],
-                out: Any, multi_output: Optional[bool] = None) -> ProvRecord:
+                out: Any, multi_output: Optional[bool] = None,
+                meta: Optional[Mapping[str, Any]] = None) -> ProvRecord:
     """Manually append a :class:`ProvRecord` for an executed op.
 
     ``tracked`` is (param_name, input_object) in call order; ``params`` holds
     the remaining literal parameters.  Input chains merge (deduplicated by
     output token, order-preserving) and the new record is appended to the
     chain attached to ``out`` (each element, if the op returns a tuple).
+    ``meta`` attaches execution metadata (scheduler queueing/coalescing
+    facts) that export/replay ignore.
 
     Used directly by the service's fusion scheduler, which executes one
     batched engine call but must give every per-request slice the provenance
@@ -314,7 +324,9 @@ def record_call(op: str, tracked: Sequence[Tuple[str, Any]],
     inputs = tuple((name, version_of(objx)) for name, objx in tracked)
     outs = tuple(out) if multi_output else (out,)
     outputs = tuple(version_of(o) for o in outs)
-    rec = ProvRecord(op=op, inputs=inputs, params=canon, outputs=outputs)
+    mcanon = () if meta is None else canonical_params(meta)
+    rec = ProvRecord(op=op, inputs=inputs, params=canon, outputs=outputs,
+                     meta=mcanon)
     chain: List[ProvRecord] = []
     seen: set = set()
     for _, objx in tracked:
@@ -326,6 +338,26 @@ def record_call(op: str, tracked: Sequence[Tuple[str, Any]],
     for o in outs:
         _attach_records(o, tuple(chain))
     return rec
+
+
+def annotate_last(obj: Any, meta: Mapping[str, Any]) -> bool:
+    """Merge ``meta`` into the newest provenance record attached to ``obj``.
+
+    The service scheduler uses this to stamp queueing/coalescing facts
+    (queued_ms, batch size, scheduling mode) onto a result produced through
+    a ``@track``-ed op — the record already exists by the time the
+    scheduler knows what it cost.  Returns False (no-op) for objects
+    without provenance, e.g. tuple-returning ops or roots.  Only call this
+    on a freshly produced object: chains are shared by reference with
+    cached copies of the same value.
+    """
+    recs = records_of(obj)
+    if not recs:
+        return False
+    last = _dc_replace(recs[-1],
+                       meta=recs[-1].meta + canonical_params(meta))
+    _attach_records(obj, recs[:-1] + (last,))
+    return True
 
 
 def track(op: str, script: str) -> Callable:

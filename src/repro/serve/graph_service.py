@@ -32,8 +32,17 @@ ROADMAP's "serve heavy multi-user traffic" north star grows from:
       because updates are functional, a stale hit is impossible.
 
 Requests are submitted with :meth:`GraphService.submit` (returns a
-:class:`Pending`) and executed at the next :meth:`GraphService.flush` — the
-batching window that gives concurrent requests the chance to fuse.
+:class:`Pending`) and flow through the load-aware scheduler
+(:mod:`repro.serve.scheduler`): per-session admission control (bounded
+in-flight quota and queue-depth backpressure raise
+:class:`~repro.serve.policy.RejectedError` with a retry-after hint; requests
+carrying a ``"deadline_ms"`` are dropped unexecuted once stale), deficit-
+round-robin fair share charged in measured engine milliseconds, and load-
+tiered batching windows that generalize the fusion scheduler.  With
+``workers=0`` (the default) execution happens inline at
+:meth:`GraphService.flush` — the synchronous drain that gives concurrent
+requests the chance to fuse; with ``workers>0`` background worker threads
+run the same loop continuously and :meth:`Pending.result` simply waits.
 :meth:`GraphService.execute` is the submit+flush+result convenience for
 sequential use.  All entry points are thread-safe.
 """
@@ -45,6 +54,7 @@ import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -54,12 +64,12 @@ from ..core import provenance as prov
 from ..core import relational as R
 from ..core.graph import Graph
 from ..core.table import Table
+from .policy import (DeadlineExpired, RejectedError, SchedulerPolicy,
+                     ServiceError)
+from .scheduler import QueuedRequest, Scheduler
 
-__all__ = ["Workspace", "Session", "GraphService", "Pending", "ServiceError"]
-
-
-class ServiceError(RuntimeError):
-    pass
+__all__ = ["Workspace", "Session", "GraphService", "Pending", "ServiceError",
+           "RejectedError", "DeadlineExpired", "SchedulerPolicy"]
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +131,36 @@ _PROV_OP = {"bfs": "algorithms.bfs", "sssp": "algorithms.sssp",
 _FUSE_DEPTH_DEFAULT: Dict[str, Optional[int]] = {
     "bfs": None, "sssp": None, "personalized_pagerank": 10,
 }
+
+
+def _sssp_weights_block_fusion(canon: Tuple[Tuple[str, Any], ...]) -> bool:
+    """True when an ``sssp`` request's weights bar it from coalescing.
+
+    Any negative weight voids the |V|-round convergence bound the fused
+    mixed-depth batch uses for its unbounded members (ROADMAP open item),
+    so such requests never coalesce — each runs standalone.  The check
+    reads the already-canonicalized literal (at most 256 embedded values,
+    no device transfer); an :class:`~repro.core.provenance.Opaque` weights
+    array could never share a fusion key anyway (identity-hashed), so it is
+    unfusable too rather than worth an O(|E|) scan.
+    """
+    for k, v in canon:
+        if k != "weights":
+            continue
+        if v is None:
+            return False
+        if isinstance(v, tuple) and len(v) == 4 and v[0] == "array":
+            return any(x < 0 for x in v[3])
+        return True          # opaque / non-array literal: stay unfused
+    return False
+
+
+def _block(out: Any) -> Any:
+    """Wait for device work so measured engine-ms is real, not dispatch."""
+    try:
+        return jax.block_until_ready(out)
+    except Exception:
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -243,7 +283,7 @@ class Session:
 
 
 class Pending:
-    """Handle for a submitted request; resolved at the next service flush."""
+    """Handle for a submitted request; resolved by the scheduler."""
 
     def __init__(self, session: Session, request: Dict[str, Any]):
         self.session = session
@@ -254,6 +294,7 @@ class Pending:
         self.cached = False
         self.fused = False
         self.submitted_at = time.perf_counter()
+        self.dispatched_at: Optional[float] = None
         self.completed_at: Optional[float] = None
         self._event = threading.Event()
 
@@ -262,6 +303,13 @@ class Pending:
         if self.completed_at is None:
             return None
         return (self.completed_at - self.submitted_at) * 1e3
+
+    @property
+    def queued_ms(self) -> Optional[float]:
+        """Time spent waiting for the scheduler to dispatch this request."""
+        if self.dispatched_at is None:
+            return None
+        return (self.dispatched_at - self.submitted_at) * 1e3
 
     def _resolve(self, value: Any = None,
                  error: Optional[BaseException] = None,
@@ -272,11 +320,15 @@ class Pending:
         self.done = True
         self._event.set()
 
-    def result(self) -> Any:
+    def result(self, timeout: Optional[float] = None) -> Any:
         if not self.done:
-            self.session.service.flush()
-            # another thread's flush may have claimed this request mid-run
-            self._event.wait()
+            # sync services drain inline; worker-backed ones just wait
+            # (another thread's drain may have claimed this request mid-run)
+            self.session.service._ensure_progress()
+            if not self._event.wait(timeout):
+                raise TimeoutError(
+                    f"request {self.request.get('op')!r} still pending "
+                    f"after {timeout}s")
         if self.error is not None:
             raise self.error
         return self.value
@@ -299,23 +351,61 @@ class GraphService:
     for relational ops, ``"graph"`` for conversions and algorithms, plus
     ``"scores"`` for ``table_from_map``.  Slots resolve session-first, then
     workspace.  ``params`` holds the remaining literal keyword arguments of
-    the underlying function.
+    the underlying function.  A request may additionally carry
+    ``"deadline_ms"``: if the scheduler cannot dispatch it within that
+    budget it resolves with :class:`DeadlineExpired` instead of reaching
+    the engine.
+
+    Named inputs resolve at **submit** time, pinning the object versions
+    the session named (a concurrent workspace update cannot change what an
+    already-submitted request computes).  Consequently a request that
+    consumes another request's ``"as"`` binding must be submitted after
+    the producer has *resolved* (``execute`` or ``result()``), not merely
+    after it was submitted — the binding does not exist before then.
+
+    ``policy`` configures admission control, fair share and batching
+    windows (:class:`~repro.serve.policy.SchedulerPolicy`); over-quota
+    submits raise :class:`RejectedError` with a ``retry_after`` hint.
+    ``workers`` starts that many background scheduler threads — the serving
+    mode the overload benchmark measures; with ``workers=0`` the scheduler
+    runs inline at :meth:`flush` (deterministic, test-friendly).
     """
 
     def __init__(self, workspace: Optional[Workspace] = None, *,
                  fuse: bool = True, cache: bool = True,
-                 max_cache_entries: int = 1024):
+                 max_cache_entries: int = 1024,
+                 policy: Optional[SchedulerPolicy] = None,
+                 workers: int = 0):
         self.workspace = workspace if workspace is not None else Workspace()
         self.fuse = fuse
         self.cache_enabled = cache
         self._cache: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._max_cache = max_cache_entries
-        self._queue: List[Pending] = []
         self._lock = threading.RLock()
         self._sessions: Dict[str, Session] = {}
         self.stats = {"requests": 0, "cache_hits": 0, "cache_misses": 0,
                       "fused_calls": 0, "fused_requests": 0,
-                      "engine_calls": 0}
+                      "engine_calls": 0, "rejected": 0, "expired": 0,
+                      "batch_windows": 0}
+        self.policy = policy if policy is not None else SchedulerPolicy()
+        self.scheduler = Scheduler(self, self.policy)
+        self._stop = threading.Event()
+        self._worker_threads: List[threading.Thread] = []
+        for i in range(workers):
+            t = threading.Thread(target=self.scheduler.run_loop,
+                                 args=(self._stop,), daemon=True,
+                                 name=f"graph-service-worker-{i}")
+            t.start()
+            self._worker_threads.append(t)
+
+    def close(self) -> None:
+        """Stop background workers (no-op for inline services)."""
+        self._stop.set()
+        with self.scheduler._cond:
+            self.scheduler._cond.notify_all()
+        for t in self._worker_threads:
+            t.join(timeout=5.0)
+        self._worker_threads = []
 
     # -- sessions -----------------------------------------------------------
     def session(self, name: str) -> Session:
@@ -324,15 +414,29 @@ class GraphService:
                 self._sessions[name] = Session(self, name)
             return self._sessions[name]
 
+    def session_stats(self, name: str) -> Dict[str, Any]:
+        """Scheduler-side accounting for one session (queue, deficit,
+        engine-ms consumed, completions, rejections, expiries)."""
+        return self.scheduler.session_stats(name)
+
     # -- submission ---------------------------------------------------------
     def submit(self, session: Session, request: Dict[str, Any]) -> Pending:
+        """Validate, prepare and enqueue a request.
+
+        Raises :class:`RejectedError` (with ``retry_after``) when the
+        session is over its in-flight quota or the service backlog is at
+        its depth bound.  Preparation errors (unknown names, missing slots)
+        resolve the returned :class:`Pending` instead of raising here.
+        """
         op = request.get("op")
         if op not in _OPS:
             raise ServiceError(f"unknown op {op!r}; have {sorted(_OPS)}")
         p = Pending(session, dict(request))
         with self._lock:
-            self._queue.append(p)
             self.stats["requests"] += 1
+        q = self._prepare(p)
+        if q is not None:
+            self.scheduler.submit(q)
         return p
 
     def execute(self, session: Session, request: Dict[str, Any]) -> Any:
@@ -379,38 +483,27 @@ class GraphService:
             while len(self._cache) > self._max_cache:
                 self._cache.popitem(last=False)
 
-    # -- the scheduler ------------------------------------------------------
-    def flush(self) -> None:
-        """Run every queued request: cache lookups, fusion, execution."""
-        with self._lock:
-            batch, self._queue = self._queue, []
-        if not batch:
-            return
+    # -- preparation (submit-time resolution) -------------------------------
+    def _prepare(self, p: Pending) -> Optional[QueuedRequest]:
+        """Resolve names and compute fusion/cache keys at submit time.
 
-        fusable: Dict[Tuple, List[Tuple[Pending, int, Optional[Tuple], Any]]] = {}
-        for p in batch:
-            try:
-                self._dispatch(p, fusable)
-            except Exception as e:  # resolve, don't poison the batch
-                p._resolve(error=e)
-        for group in fusable.values():
-            try:
-                self._run_fused(group)
-            except Exception as e:
-                for p, *_ in group:
-                    p._resolve(error=e)
-
-    def _dispatch(self, p: Pending, fusable: Dict) -> None:
+        Resolving here pins the object versions the session named at
+        submission — coalescing and caching later must not observe a
+        concurrent workspace update.  A resolution error resolves the
+        :class:`Pending` (the submitter sees it at ``result()``) and
+        returns None so nothing is enqueued.
+        """
         op = p.request["op"]
-        fn, _ = _OPS[op]
-        inputs = self._resolve_inputs(p)
-        params = dict(p.request.get("params") or {})
-        canon = prov.canonical_params(params)
-        key = self._cache_key(op, inputs, canon)
-        hit, found = self._cache_get(key)
-        if found:
-            self._finish(p, hit, cached=True)
-            return
+        try:
+            inputs = self._resolve_inputs(p)
+            params = dict(p.request.get("params") or {})
+            canon = prov.canonical_params(params)
+            key = self._cache_key(op, inputs, canon)
+        except Exception as e:
+            p._resolve(error=e)
+            return None
+        payload: Dict[str, Any] = {"inputs": inputs, "params": params}
+        fuse_key = None
         src_param = _FUSABLE.get(op)
         source = params.get(src_param) if src_param else None
         n_iter = params.get("n_iter")
@@ -418,57 +511,85 @@ class GraphService:
                 and isinstance(source, (int, np.integer))
                 and not isinstance(source, bool)
                 and (n_iter is None or (isinstance(n_iter, (int, np.integer))
-                                        and not isinstance(n_iter, bool)))):
+                                        and not isinstance(n_iter, bool)))
+                and not (op == "sssp"
+                         and _sssp_weights_block_fusion(canon))):
             # n_iter joins source as a per-request coordinate: requests that
             # differ only in depth still share one fused engine call
             rest = tuple(sorted(((k, v) for k, v in canon
                                  if k not in (src_param, "n_iter")),
                                 key=lambda kv: kv[0]))
-            # carry the resolved graph into the group: re-resolving by name
-            # at fusion time could observe a concurrent workspace update and
-            # cache a different version's result under this version's key
-            gkey = (op, prov.version_of(inputs[0][1]), rest)
-            fusable.setdefault(gkey, []).append((p, source, key,
-                                                 inputs[0][1], n_iter))
-            return
-        with self._lock:
-            self.stats["engine_calls"] += 1
-        out = fn(**dict(inputs), **params)
-        self._cache_put(key, out)
-        self._finish(p, out)
+            fuse_key = (op, prov.version_of(inputs[0][1]), rest)
+            payload.update(graph=inputs[0][1], source=int(source),
+                           n_iter=None if n_iter is None else int(n_iter))
+        deadline_ms = p.request.get("deadline_ms",
+                                    self.policy.default_deadline_ms)
+        deadline = (None if deadline_ms is None
+                    else p.submitted_at + float(deadline_ms) / 1e3)
+        return QueuedRequest(pending=p, session=p.session.name, op=op,
+                             cache_key=key, fuse_key=fuse_key,
+                             payload=payload, deadline=deadline)
 
-    def _run_fused(self, group: List[Tuple[Pending, int, Optional[Tuple],
-                                           Any, Optional[int]]]) -> None:
-        """One vmapped multi-source call; scatter rows back per request.
+    # -- scheduler callbacks ------------------------------------------------
+    def _cache_lookup(self, q: QueuedRequest) -> Tuple[Any, bool]:
+        return self._cache_get(q.cache_key)
 
-        Requests in a group share every parameter except ``source`` and
-        ``n_iter``.  Mixed depths run as ONE batch to the max cap with each
-        row frozen at its own — bit-identical to running every request
-        sequentially at its own depth — and rows scatter back per request.
+    def _finish_cached(self, q: QueuedRequest, value: Any) -> None:
+        self._finish(q.pending, value, cached=True)
+
+    def _sched_meta(self, q: QueuedRequest, batch: int
+                    ) -> Dict[str, Any]:
+        """Queueing/coalescing metadata recorded on result provenance."""
+        queued = q.pending.queued_ms
+        return {"queued_ms": 0.0 if queued is None else round(queued, 3),
+                "batch": batch, "sched_mode": self.policy.mode}
+
+    def _run_group(self, group: List[QueuedRequest]) -> float:
+        """Execute one engine call for ``group``; returns measured engine ms.
+
+        A singleton non-fusable request calls its op directly.  A fused
+        group shares every parameter except ``source`` and ``n_iter``:
+        mixed depths run as ONE batch to the max cap with each row frozen
+        at its own — bit-identical to running every request sequentially at
+        its own depth — and rows scatter back per request.
         """
-        p0 = group[0][0]
-        op = p0.request["op"]
+        if not group:
+            return 0.0
+        q0 = group[0]
+        op = q0.op
         fn, _ = _OPS[op]
-        src_param = _FUSABLE[op]
-        g = group[0][3]   # resolved at dispatch: the version the keys name
-        params = dict(p0.request.get("params") or {})
-        params.pop(src_param, None)
-        params.pop("n_iter", None)
-        sources = [s for _, s, _, _, _ in group]
-        n_iters = [ni for _, _, _, _, ni in group]
         with self._lock:
             self.stats["engine_calls"] += 1
             if len(group) > 1:
                 self.stats["fused_calls"] += 1
                 self.stats["fused_requests"] += len(group)
+        if q0.fuse_key is None:
+            t0 = time.perf_counter()
+            out = _block(fn(**dict(q0.payload["inputs"]),
+                            **q0.payload["params"]))
+            dt = (time.perf_counter() - t0) * 1e3
+            prov.annotate_last(out, self._sched_meta(q0, 1))
+            self._cache_put(q0.cache_key, out)
+            self._finish(q0.pending, out)
+            return dt
+        src_param = _FUSABLE[op]
+        g = q0.payload["graph"]   # pinned at submit: the version keys name
+        params = dict(q0.payload["params"])
+        params.pop(src_param, None)
+        params.pop("n_iter", None)
+        sources = [m.payload["source"] for m in group]
+        n_iters = [m.payload["n_iter"] for m in group]
         if len(group) == 1:
             kw = dict(params)
             if n_iters[0] is not None:
                 kw["n_iter"] = n_iters[0]
-            out = fn(g, sources[0], **kw)
-            self._cache_put(group[0][2], out)
-            self._finish(group[0][0], out)
-            return
+            t0 = time.perf_counter()
+            out = _block(fn(g, sources[0], **kw))
+            dt = (time.perf_counter() - t0) * 1e3
+            prov.annotate_last(out, self._sched_meta(q0, 1))
+            self._cache_put(q0.cache_key, out)
+            self._finish(q0.pending, out)
+            return dt
         default = _FUSE_DEPTH_DEFAULT[op]
         if default is None:
             default = g.n_nodes            # convergence bound for bfs/sssp
@@ -480,17 +601,34 @@ class GraphService:
         else:
             caps = [default if ni is None else int(ni) for ni in n_iters]
             kw = dict(params, n_iter=np.asarray(caps, np.int32))
-        rows = fn(g, jnp.asarray(sources, dtype=jnp.int32), **kw)
-        for i, (p, s, key, _, ni) in enumerate(group):
+        t0 = time.perf_counter()
+        rows = _block(fn(g, jnp.asarray(sources, dtype=jnp.int32), **kw))
+        dt = (time.perf_counter() - t0) * 1e3
+        for i, m in enumerate(group):
             row = rows[i]
             # the row's provenance is the *single-source* call it stands
-            # for — export/replay must not see the fusion batch
-            req_params = {**params, src_param: s}
-            if ni is not None:
-                req_params["n_iter"] = int(ni)
-            prov.record_call(_PROV_OP[op], [("g", g)], req_params, row)
-            self._cache_put(key, row)
-            self._finish(p, row, fused=True)
+            # for — export/replay must not see the fusion batch; the batch
+            # shows up only as scheduling metadata on the record
+            req_params = {**params, src_param: m.payload["source"]}
+            if m.payload["n_iter"] is not None:
+                req_params["n_iter"] = int(m.payload["n_iter"])
+            prov.record_call(_PROV_OP[op], [("g", g)], req_params, row,
+                             meta=self._sched_meta(m, len(group)))
+            self._cache_put(m.cache_key, row)
+            self._finish(m.pending, row, fused=True)
+        return dt
+
+    # -- draining -----------------------------------------------------------
+    def flush(self) -> None:
+        """Drain the scheduler inline: admission-passed requests execute in
+        fair-share (or FIFO) order, coalescing whatever is compatible."""
+        self.scheduler.drain()
+
+    def _ensure_progress(self) -> None:
+        """Called by :meth:`Pending.result`: inline services drain; worker-
+        backed ones rely on their threads."""
+        if not self._worker_threads:
+            self.scheduler.drain()
 
     def _finish(self, p: Pending, value: Any, cached: bool = False,
                 fused: bool = False) -> None:

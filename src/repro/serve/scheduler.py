@@ -1,0 +1,356 @@
+"""Load-aware request scheduler for the interactive service.
+
+The queue between :class:`~repro.serve.graph_service.GraphService` and the
+engine — and, per the ROADMAP, the seam where a wire protocol attaches for
+cross-process serving later.  Everything that decides *when* and *in what
+order* a declarative request reaches the engine lives here; everything that
+decides *what the request computes* (input resolution, result cache, fusion
+semantics, provenance) stays in the service, which hands this module an
+already-prepared :class:`QueuedRequest` and exposes three callbacks
+(`_cache_lookup`, `_finish_cached`, `_run_group`).
+
+Three mechanisms, configured by :class:`~repro.serve.policy.SchedulerPolicy`:
+
+* **Admission control** — :meth:`Scheduler.submit` rejects a request whose
+  session is at its in-flight quota, or when the global backlog hits the
+  queue-depth bound, raising :class:`~repro.serve.policy.RejectedError` with
+  a ``retry_after`` derived from the EMA of observed per-request engine
+  time.  Requests carrying a deadline are dropped at dispatch (never
+  reaching the engine) once it has passed.
+* **Fair share** — deficit round robin across sessions, denominated in
+  *measured engine milliseconds*.  Each pick tops every waiting session up
+  by ``quantum_ms * weight`` and serves the first session in rotation whose
+  deficit is in credit; executed work is charged back at its actual cost
+  (a coalesced batch splits its cost across the member requests'
+  sessions).  A session that recently burned lots of engine time is deep in
+  debt and waits it out, so a scan-heavy flood cannot starve interactive
+  sessions — yet with the machine otherwise idle the flood runs at full
+  speed (top-ups fast-forward when nobody else is waiting; the scheduler is
+  work-conserving).
+* **Batching windows** — when the popped request is coalescible, compatible
+  requests are gathered from *every* session's queue into one engine call.
+  In the worker loop (``allow_wait=True``) a loaded scheduler additionally
+  holds the batch open for a bounded window so near-simultaneous arrivals
+  coalesce too; the window scales with backlog and is exactly zero when the
+  queue is empty, leaving idle latency untouched.
+
+Synchronous use (:meth:`drain`, what ``GraphService.flush`` calls) runs the
+same decision loop inline with windows disabled — everything fusable is
+already queued, so waiting could only lose.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from .policy import DeadlineExpired, RejectedError, SchedulerPolicy
+
+__all__ = ["QueuedRequest", "Scheduler"]
+
+
+@dataclass
+class QueuedRequest:
+    """A prepared request waiting for dispatch.
+
+    The service resolves names, canonicalizes params and computes the fusion
+    / cache keys at submit time (pinning the object versions the request
+    names); the scheduler only ever compares keys and moves these records
+    between queues.
+    """
+
+    pending: Any                      # graph_service.Pending
+    session: str
+    op: str
+    cache_key: Optional[Tuple] = None
+    fuse_key: Optional[Tuple] = None  # None: never coalesced
+    payload: Dict[str, Any] = field(default_factory=dict)
+    deadline: Optional[float] = None  # absolute perf_counter seconds
+    seq: int = 0                      # global arrival order (FIFO mode)
+
+
+class _SessionState:
+    """Queue + deficit + accounting for one session."""
+
+    __slots__ = ("name", "queue", "inflight", "deficit_ms", "recent_ms",
+                 "completed", "engine_ms", "rejected", "expired")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.queue: Deque[QueuedRequest] = deque()
+        self.inflight = 0          # queued + executing, admission-bounded
+        self.deficit_ms = 0.0      # DRR credit (+) / debt (-)
+        self.recent_ms = 0.0       # decayed engine-ms consumption
+        self.completed = 0
+        self.engine_ms = 0.0
+        self.rejected = 0
+        self.expired = 0
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"queued": len(self.queue), "inflight": self.inflight,
+                "deficit_ms": round(self.deficit_ms, 3),
+                "recent_ms": round(self.recent_ms, 3),
+                "completed": self.completed,
+                "engine_ms": round(self.engine_ms, 3),
+                "rejected": self.rejected, "expired": self.expired}
+
+
+class Scheduler:
+    """Admission, ordering and coalescing between submit and the engine."""
+
+    def __init__(self, service: Any, policy: SchedulerPolicy):
+        self.service = service
+        self.policy = policy
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._sessions: Dict[str, _SessionState] = {}
+        self._order: List[str] = []       # session insertion order (RR ring)
+        self._rr_last: Optional[str] = None
+        self._seq = 0
+        self._total_queued = 0
+        self._est_ms = 50.0               # EMA of per-request engine ms
+
+    # -- introspection ------------------------------------------------------
+    def _state(self, name: str) -> _SessionState:
+        st = self._sessions.get(name)
+        if st is None:
+            st = self._sessions[name] = _SessionState(name)
+            self._order.append(name)
+        return st
+
+    def queued_count(self, session: Optional[str] = None) -> int:
+        with self._lock:
+            if session is None:
+                return self._total_queued
+            st = self._sessions.get(session)
+            return len(st.queue) if st else 0
+
+    def session_stats(self, session: str) -> Dict[str, Any]:
+        with self._lock:
+            return self._state(session).snapshot()
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, q: QueuedRequest) -> None:
+        """Enqueue or reject; rejection raises before the queue is touched."""
+        adm = self.policy.admission
+        with self._cond:
+            st = self._state(q.session)
+            quota = adm.quota_for(q.session)
+            if st.inflight >= quota:
+                st.rejected += 1
+                self.service.stats["rejected"] += 1
+                retry = max(adm.min_retry_after_s,
+                            st.inflight * self._est_ms / 1e3)
+                raise RejectedError(
+                    f"session {q.session!r} is at its in-flight quota "
+                    f"({quota})", retry)
+            if self._total_queued >= adm.max_queue_depth:
+                st.rejected += 1
+                self.service.stats["rejected"] += 1
+                retry = max(adm.min_retry_after_s,
+                            self._total_queued * self._est_ms / 1e3)
+                raise RejectedError(
+                    f"service backlog is at its queue-depth bound "
+                    f"({adm.max_queue_depth})", retry)
+            q.seq = self._seq
+            self._seq += 1
+            st.inflight += 1
+            st.queue.append(q)
+            self._total_queued += 1
+            self._cond.notify_all()
+
+    # -- selection ----------------------------------------------------------
+    def _waiting_locked(self) -> List[_SessionState]:
+        return [self._sessions[n] for n in self._order
+                if self._sessions[n].queue]
+
+    def _pick_locked(self) -> Optional[QueuedRequest]:
+        waiting = self._waiting_locked()
+        if not waiting:
+            return None
+        if self.policy.mode == "fifo":
+            st = min(waiting, key=lambda s: s.queue[0].seq)
+        else:
+            st = self._pick_fair_locked(waiting)
+        q = st.queue.popleft()
+        self._total_queued -= 1
+        self._rr_last = st.name
+        return q
+
+    def _pick_fair_locked(self, waiting: List[_SessionState]) -> _SessionState:
+        """Deficit round robin over the sessions that have queued work."""
+        fair = self.policy.fair
+        names = [s.name for s in waiting]
+        if self._rr_last in names:         # resume rotation after last pick
+            i = names.index(self._rr_last)
+            waiting = waiting[i + 1:] + waiting[:i + 1]
+        # one top-up per pick (≈ one DRR visit of every waiting session)...
+        for s in waiting:
+            w = max(fair.weight_for(s.name), 1e-6)
+            s.deficit_ms = min(s.deficit_ms + fair.quantum_ms * w,
+                               fair.burst_ms)
+        for s in waiting:
+            if s.deficit_ms > 0:
+                return s
+        # ...and when every session is in debt (nothing dispatchable), fast-
+        # forward the idle top-up rounds in closed form instead of spinning:
+        # the scheduler stays work-conserving without a busy loop.
+        passes = []
+        for s in waiting:
+            w = max(fair.weight_for(s.name), 1e-6)
+            passes.append(int(-s.deficit_ms // (fair.quantum_ms * w)) + 1)
+        k = max(1, min(passes))
+        for s in waiting:
+            w = max(fair.weight_for(s.name), 1e-6)
+            s.deficit_ms = min(s.deficit_ms + k * fair.quantum_ms * w,
+                               fair.burst_ms)
+        for s in waiting:
+            if s.deficit_ms > 0:
+                return s
+        return waiting[0]                  # float-fuzz fallback
+
+    # -- coalescing ---------------------------------------------------------
+    def _collect_locked(self, q: QueuedRequest, cap: int
+                        ) -> List[QueuedRequest]:
+        """Pull every queued request sharing ``q.fuse_key`` (up to cap)."""
+        out: List[QueuedRequest] = []
+        for name in self._order:
+            st = self._sessions[name]
+            if not st.queue:
+                continue
+            kept: Deque[QueuedRequest] = deque()
+            while st.queue:
+                item = st.queue.popleft()
+                if len(out) < cap and item.fuse_key == q.fuse_key:
+                    out.append(item)
+                    self._total_queued -= 1
+                else:
+                    kept.append(item)
+            st.queue = kept
+        return out
+
+    def _gather(self, q: QueuedRequest, allow_wait: bool
+                ) -> List[QueuedRequest]:
+        """Coalesce compatible requests; optionally hold a batching window.
+
+        The window only opens from the worker loop (``allow_wait``) and only
+        under load: with an empty residual queue it is zero, so an idle
+        single request executes immediately.  Synchronous drains never wait
+        — every coalescible request is already queued.
+        """
+        bp = self.policy.batch
+        group = [q]
+        with self._cond:
+            group += self._collect_locked(q, bp.max_batch - len(group))
+            if allow_wait and len(group) < bp.max_batch:
+                window = bp.effective_window_s(self._total_queued)
+                if window > 0:
+                    self.service.stats["batch_windows"] += 1
+                    deadline = time.perf_counter() + window
+                    while True:
+                        remaining = deadline - time.perf_counter()
+                        if remaining <= 0 or len(group) >= bp.max_batch:
+                            break
+                        self._cond.wait(timeout=remaining)
+                        group += self._collect_locked(
+                            q, bp.max_batch - len(group))
+        return group
+
+    # -- accounting ---------------------------------------------------------
+    def _done(self, q: QueuedRequest, engine_ms: float,
+              completed: bool = True) -> None:
+        fair = self.policy.fair
+        with self._cond:
+            st = self._state(q.session)
+            st.inflight -= 1
+            if completed:            # expired drops resolve but don't count
+                st.completed += 1
+            st.engine_ms += engine_ms
+            st.recent_ms = st.recent_ms * fair.decay + engine_ms
+            if engine_ms > 0:
+                st.deficit_ms = max(st.deficit_ms - engine_ms, -fair.floor_ms)
+                self._est_ms = 0.8 * self._est_ms + 0.2 * engine_ms
+            self._cond.notify_all()
+
+    def _expire(self, q: QueuedRequest) -> None:
+        with self._lock:
+            self._state(q.session).expired += 1
+            self.service.stats["expired"] += 1
+        q.pending._resolve(error=DeadlineExpired(
+            f"request {q.op!r} from session {q.session!r} spent its "
+            f"deadline in the queue; dropped before execution"))
+        self._done(q, 0.0, completed=False)
+
+    # -- the decision loop --------------------------------------------------
+    def step(self, *, allow_wait: bool = False) -> bool:
+        """Dispatch one scheduling decision; False when nothing is queued.
+
+        One decision is one of: an expired request dropped, a cache hit
+        served, or one engine call (single request or coalesced batch).
+        """
+        with self._cond:
+            q = self._pick_locked()
+        if q is None:
+            return False
+        self._process(q, allow_wait)
+        return True
+
+    def _process(self, q: QueuedRequest, allow_wait: bool) -> None:
+        now = time.perf_counter()
+        if q.deadline is not None and now > q.deadline:
+            self._expire(q)
+            return
+        q.pending.dispatched_at = now
+        hit, found = self.service._cache_lookup(q)
+        if found:
+            self.service._finish_cached(q, hit)
+            self._done(q, 0.0)
+            return
+        group = [q]
+        if q.fuse_key is not None:
+            group = self._filter_group(self._gather(q, allow_wait))
+        t0 = time.perf_counter()
+        try:
+            engine_ms = self.service._run_group(group)
+        except Exception as e:           # resolve, don't poison the loop
+            engine_ms = (time.perf_counter() - t0) * 1e3
+            for m in group:
+                if not m.pending.done:
+                    m.pending._resolve(error=e)
+        for m in group:
+            self._done(m, engine_ms / max(len(group), 1))
+
+    def _filter_group(self, group: List[QueuedRequest]
+                      ) -> List[QueuedRequest]:
+        """Deadline + cache screening for gathered batch members."""
+        now = time.perf_counter()
+        out = []
+        for m in group:
+            if m.deadline is not None and now > m.deadline:
+                self._expire(m)
+                continue
+            if m is not group[0]:
+                m.pending.dispatched_at = now
+                hit, found = self.service._cache_lookup(m)
+                if found:
+                    self.service._finish_cached(m, hit)
+                    self._done(m, 0.0)
+                    continue
+            out.append(m)
+        return out
+
+    def drain(self) -> None:
+        """Run queued work to completion, inline, windows closed."""
+        while self.step(allow_wait=False):
+            pass
+
+    def run_loop(self, stop: threading.Event) -> None:
+        """Worker loop: serve until ``stop`` is set, sleeping when idle."""
+        while not stop.is_set():
+            if not self.step(allow_wait=True):
+                with self._cond:
+                    if self._total_queued == 0 and not stop.is_set():
+                        self._cond.wait(timeout=0.02)
