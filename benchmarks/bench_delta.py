@@ -2,19 +2,25 @@
 
 ``ci_check.sh`` snapshots the committed ``BENCH_engine.json`` /
 ``BENCH_service.json`` before re-running the benchmarks, then calls this
-script to diff the throughput-bearing metrics:
+script to diff them.  **Only hardware-independent speedup ratios are
+gated**; absolute numbers are printed for information but never fail:
 
-* engine: per-backend ``pagerank_ms`` and the BFS ``dense_ms`` /
-  ``frontier_ms`` (lower is better);
-* service: per-mode ``qps`` (higher is better).
+* gated — ``engine.bfs.speedup`` (frontier vs dense), ``service.
+  speedup_fused`` / ``speedup_fused_cached`` (vs sequential) and
+  ``service.overload.p99_improvement`` (fair vs fifo).  Each compares two
+  measurements from the *same run on the same machine*, so a
+  differently-sized CI runner moves numerator and denominator together and
+  the 30% bound means what it says.
+* informational — per-backend ``pagerank_ms``, BFS ``dense_ms`` /
+  ``frontier_ms``, per-mode ``qps``, and ``service.remote.
+  overhead_cached_p50`` (its 1 ms baseline floor usually dominates the
+  denominator, making it an absolute wire latency; ``ci_check.sh`` holds
+  its own <= 3x gate).  Absolute numbers are machine-relative (the
+  committed baselines come from the dev box) and gating them flaked on
+  differently-sized CI runners — the exact failure mode this split fixes.
 
-Every metric present in both files is printed old-vs-new with its relative
-change; any metric more than ``--threshold`` (default 30%) *worse* than the
-baseline fails the check.  Latency percentiles and the overload fairness
-ratio are reported by the benchmarks but deliberately not delta-gated here —
-they have their own absolute gates in ``ci_check.sh`` and are too noisy for
-a tight relative bound.  Metrics that appear or disappear (new benchmark
-blocks, renamed backends) are informational, never failures.
+Metrics that appear or disappear (new benchmark blocks, renamed backends)
+are informational, never failures.
 
 Usage::
 
@@ -27,25 +33,50 @@ import json
 import os
 import sys
 
-#: metric -> direction; "lower" = ms-like (regression when it grows),
-#: "higher" = qps-like (regression when it shrinks)
 _FILES = ("BENCH_engine.json", "BENCH_service.json")
 
 
 def _metrics(fname: str, data: dict) -> dict:
+    """metric -> (value, direction, gated).
+
+    direction "lower" = ms-like (regression when it grows), "higher" =
+    speedup/qps-like (regression when it shrinks).  gated=False metrics are
+    printed but can never fail the check.
+    """
     out = {}
     if fname == "BENCH_engine.json":
         for be, blk in (data.get("backends") or {}).items():
             if "pagerank_ms" in blk:
-                out[f"engine.{be}.pagerank_ms"] = (float(blk["pagerank_ms"]),
-                                                   "lower")
+                out[f"engine.{be}.pagerank_ms"] = (
+                    float(blk["pagerank_ms"]), "lower", False)
+        bfs = data.get("bfs") or {}
         for k in ("dense_ms", "frontier_ms"):
-            if k in (data.get("bfs") or {}):
-                out[f"engine.bfs.{k}"] = (float(data["bfs"][k]), "lower")
+            if k in bfs:
+                out[f"engine.bfs.{k}"] = (float(bfs[k]), "lower", False)
+        if "speedup" in bfs:
+            out["engine.bfs.speedup"] = (float(bfs["speedup"]), "higher",
+                                         True)
     elif fname == "BENCH_service.json":
         for mode, blk in (data.get("modes") or {}).items():
             if "qps" in blk:
-                out[f"service.{mode}.qps"] = (float(blk["qps"]), "higher")
+                out[f"service.{mode}.qps"] = (float(blk["qps"]), "higher",
+                                              False)
+        for k in ("speedup_fused", "speedup_fused_cached"):
+            if k in data:
+                out[f"service.{k}"] = (float(data[k]), "higher", True)
+        overload = data.get("overload") or {}
+        if "p99_improvement" in overload:
+            out["service.overload.p99_improvement"] = (
+                float(overload["p99_improvement"]), "higher", True)
+        remote = data.get("remote") or {}
+        if "overhead_cached_p50" in remote:
+            # info-only: the 1 ms baseline floor usually dominates the
+            # denominator, making this effectively an absolute wire
+            # latency — machine-dependent, so delta-gating it would
+            # reintroduce the runner-size flake.  ci_check.sh holds the
+            # absolute <= 3x gate for it instead.
+            out["service.remote.overhead_cached_p50"] = (
+                float(remote["overhead_cached_p50"]), "lower", False)
     return out
 
 
@@ -63,8 +94,8 @@ def main() -> int:
     ap.add_argument("--new-dir", default=".",
                     help="directory holding the freshly produced jsons")
     ap.add_argument("--threshold", type=float, default=0.30,
-                    help="fail when a metric is this fraction worse than "
-                         "the baseline (0.30 = 30%%)")
+                    help="fail when a gated ratio is this fraction worse "
+                         "than the baseline (0.30 = 30%%)")
     args = ap.parse_args()
 
     failures = []
@@ -79,14 +110,17 @@ def main() -> int:
             if key not in new:
                 rows.append((key, old[key][0], None, "dropped (info)"))
                 continue
-            ov, direction = old[key]
-            nv, _ = new[key]
+            ov, direction, gated = old[key]
+            nv, _, _ = new[key]
             if ov <= 0:
                 rows.append((key, ov, nv, "no baseline (info)"))
                 continue
-            # "worse" is direction-aware: ms growing / qps shrinking
+            # "worse" is direction-aware: ms/overhead growing, ratio shrinking
             worse = (nv - ov) / ov if direction == "lower" \
                 else (ov - nv) / ov
+            if not gated:
+                rows.append((key, ov, nv, f"{-worse:+.1%} (info only)"))
+                continue
             verdict = "OK"
             if worse > args.threshold:
                 verdict = f"REGRESSION (> {args.threshold:.0%} worse)"
@@ -94,17 +128,17 @@ def main() -> int:
             rows.append((key, ov, nv, f"{-worse:+.1%} {verdict}"))
 
     width = max((len(r[0]) for r in rows), default=10)
-    print(f"bench delta vs committed baseline "
-          f"(threshold {args.threshold:.0%}):")
+    print(f"bench delta vs committed baseline — gated metrics are "
+          f"hardware-independent ratios (threshold {args.threshold:.0%}):")
     for key, ov, nv, note in rows:
         o = "-" if ov is None else f"{ov:10.2f}"
         n = "-" if nv is None else f"{nv:10.2f}"
         print(f"  {key:<{width}}  old={o:>10}  new={n:>10}  {note}")
     if failures:
-        print(f"bench delta FAILED: {len(failures)} metric(s) regressed "
+        print(f"bench delta FAILED: {len(failures)} ratio(s) regressed "
               f"more than {args.threshold:.0%}: {', '.join(failures)}")
         return 1
-    print("bench delta OK: no metric regressed past the threshold")
+    print("bench delta OK: no gated ratio regressed past the threshold")
     return 0
 
 

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# Make-free tier-1 gate: full test suite + engine & service perf smoke.
+# Make-free tier-1 gate: full test suite + serving smoke + perf gates.
 #
-#   benchmarks/ci_check.sh            # tests + benchmarks + gates + delta
-#   benchmarks/ci_check.sh --fast     # fast tier: tests only, no benchmarks
+#   benchmarks/ci_check.sh            # tests + smoke + benchmarks + gates
+#   benchmarks/ci_check.sh --fast     # fast tier: tests + server smoke only
 #   benchmarks/ci_check.sh --scale 12 # extra args forwarded to bench_engine
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -18,8 +18,11 @@ for a in "$@"; do
 done
 
 python -m pytest -x -q
+# serving smoke: spawn a real server subprocess on an ephemeral port, run a
+# scripted wire-protocol client workload, assert a clean drain-and-exit
+python benchmarks/serve_smoke.py
 if [[ "$FAST" == "1" ]]; then
-  echo "ci_check OK (--fast tier: tests only, benchmarks skipped)"
+  echo "ci_check OK (--fast tier: tests + server smoke, benchmarks skipped)"
   exit 0
 fi
 
@@ -61,7 +64,21 @@ assert o["p99_improvement"] >= 3.0, \
     f"fair={o['modes']['fair']['interactive_p99_ms']}ms"
 print(f"overload gate OK: fair-share interactive p99 "
       f"{o['p99_improvement']}x better than FIFO")
+m = r["remote"]
+assert m["server_exit_code"] == 0, \
+    f"remote gate: server exited rc={m['server_exit_code']}"
+assert m["overhead_cached_p50"] <= 3.0, \
+    f"remote gate: wire overhead for cached queries is " \
+    f"{m['overhead_cached_p50']}x in-process p50 (> 3x, baseline " \
+    f"floored at {m['overhead_floor_ms']}ms); " \
+    f"in-process={m['inproc_cached_p50_ms']}ms " \
+    f"remote={m['remote_cached_p50_ms']}ms"
+print(f"remote gate OK: cached-query wire overhead "
+      f"{m['overhead_cached_p50']}x in-process "
+      f"({m['multiproc']['clients']} client processes, "
+      f"{m['multiproc']['agg_qps']} qps aggregate)")
 EOF
-# regression delta: fresh numbers vs the committed baseline (>30% fails)
+# regression delta: fresh ratios vs the committed baseline (>30% fails;
+# absolute ms/qps are machine-relative and reported info-only)
 python benchmarks/bench_delta.py --old-dir "$BASELINE_DIR" --new-dir . \
   --threshold 0.30

@@ -1,0 +1,70 @@
+"""Cross-process serving demo: the §4.1 expert-finding analysis, run by a
+*client process* against a Ringo server it spawned.
+
+Ringo's premise (§2.1) is many analysts sharing one big-memory machine.
+``examples/stackoverflow_experts.py`` runs that workload in-process; this
+example runs the *identical* workload body through the wire protocol:
+
+    server process   python -m repro.serve.server        (spawned here)
+        one GraphService: shared Workspace, admission control, fair-share
+        scheduler, fusion + result cache
+    this process     RemoteService -> RemoteSession      (serve/client.py)
+        declarative requests as binary frames; results stream back with
+        their provenance chains, so even `export_script` of a remotely
+        computed table works locally
+
+It finishes by asserting the remote run's expert scores match an in-process
+run bit-for-bit, then asks the server to drain and exit.
+
+Run:  PYTHONPATH=src python examples/remote_analytics.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from stackoverflow_experts import run_workload  # noqa: E402
+
+from repro.serve.client import RemoteService  # noqa: E402
+from repro.serve.graph_service import GraphService  # noqa: E402
+from repro.serve.server import spawn_server  # noqa: E402
+
+
+def main():
+    proc, port = spawn_server(("--workers", "2"))
+    print(f"spawned server pid={proc.pid} on port {port}")
+    try:
+        client = RemoteService(port=port)
+        print(f"connected: conn={client.conn_id} "
+              f"server_pid={client.server_pid} "
+              f"(client pid={os.getpid()})")
+        assert client.server_pid != os.getpid(), "not actually remote?!"
+
+        # smaller dataset than the in-process demo: this example runs the
+        # workload twice (wire + in-process) to prove equality
+        S_remote = run_workload(
+            client, n_questions=800,
+            export_path="/tmp/remote_analytics_export.py")
+
+        # same workload, in-process: scores must be identical
+        S_local = run_workload(GraphService(), n_questions=800)
+        np.testing.assert_array_equal(np.asarray(S_remote.column("Scr")),
+                                      np.asarray(S_local.column("Scr")))
+        np.testing.assert_array_equal(np.asarray(S_remote.column("User")),
+                                      np.asarray(S_local.column("User")))
+        print("remote scores == in-process scores ✓")
+
+        client.shutdown_server()
+        client.close()
+        rc = proc.wait(timeout=120)
+        print(f"server exited rc={rc}")
+        assert rc == 0, "server did not shut down cleanly"
+    finally:
+        if proc.poll() is None:      # failure path: don't leak the server
+            proc.kill()
+
+
+if __name__ == "__main__":
+    main()

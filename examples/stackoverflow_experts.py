@@ -20,6 +20,15 @@ queries hit the versioned result cache, concurrent single-source traversals
 fuse into one vmapped engine call, and the final table's provenance chain is
 exported with ``export_script`` and re-executed to verify identical scores.
 
+The workload body (:func:`run_workload`) is transport-agnostic: it takes any
+object mirroring the service surface (``.workspace``, ``.session``,
+``.stats``), so the same code runs against the in-process
+:class:`GraphService` (this file's ``main``) or a
+:class:`repro.serve.client.RemoteService` speaking the wire protocol to a
+separate server process (``examples/remote_analytics.py``) — the acceptance
+bar for the cross-process subsystem is that both produce identical scores
+and provenance.
+
 Run:  PYTHONPATH=src python examples/stackoverflow_experts.py
 """
 
@@ -61,9 +70,15 @@ def synthetic_stackoverflow(n_users=500, n_questions=3000, seed=0):
          "AnswerId": answer_id})
 
 
-def main():
-    service = GraphService()
-    service.workspace.put("posts", synthetic_stackoverflow())  # LoadTableTSV
+def run_workload(service, *, n_questions=3000,
+                 export_path="/tmp/stackoverflow_experts_export.py"):
+    """The paper's §4.1 command sequence against any service transport.
+
+    Returns the final experts table; asserts the exported provenance script
+    re-executes to identical scores along the way.
+    """
+    service.workspace.put("posts",                             # LoadTableTSV
+                          synthetic_stackoverflow(n_questions=n_questions))
     sess = service.session("analyst")
     print("posts:", sess.get("posts"))
 
@@ -110,21 +125,28 @@ def main():
     print("top by HITS authority:", S2.to_pydict()["User"][:10])
 
     # §4: export the whole analysis as a standalone runnable script, then
-    # re-execute it and verify the PageRank scores are identical
+    # re-execute it and verify the PageRank scores are identical.  This
+    # works even when S was computed in another process: results adopt
+    # their provenance chains across the wire, and the posts root the
+    # client put() is bound to its server-assigned version token.
     script = provenance.export_script(S)
-    path = "/tmp/stackoverflow_experts_export.py"
-    with open(path, "w") as f:
+    with open(export_path, "w") as f:
         f.write(script)
     print(f"exported provenance script ({len(script.splitlines())} lines) "
-          f"-> {path}")
+          f"-> {export_path}")
     ns = {}
-    exec(compile(script, path, "exec"), ns)
+    exec(compile(script, export_path, "exec"), ns)
     S_rebuilt = ns["rebuild"]()
     np.testing.assert_array_equal(S_rebuilt.column_np("Scr"),
-                                  S.column_np("Scr"))
+                                  np.asarray(S.column("Scr")))
     np.testing.assert_array_equal(S_rebuilt.column_np("User"),
-                                  S.column_np("User"))
+                                  np.asarray(S.column("User")))
     print("re-executed export: PageRank scores identical ✓")
+    return S
+
+
+def main():
+    run_workload(GraphService())
 
 
 if __name__ == "__main__":

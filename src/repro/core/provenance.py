@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import functools
 import inspect
-import itertools
+import secrets
 import threading
 import weakref
 from collections import OrderedDict
@@ -52,6 +52,11 @@ __all__ = [
     "annotate_last",
     "records_of",
     "version_of",
+    "peek_version",
+    "bind_version",
+    "adopt_records",
+    "records_to_wire",
+    "records_from_wire",
     "roots_of",
     "object_for_version",
     "canonical_value",
@@ -109,7 +114,14 @@ class ProvRecord:
 # ---------------------------------------------------------------------------
 
 _LOCK = threading.RLock()
-_COUNTER = itertools.count(1)
+_NEXT_VERSION = 1
+# Tokens are minted as "<kind><n>x<nonce>" with a per-process random nonce:
+# two processes can never mint the same token, so a client-side token
+# shipped over the wire (pack_object peeks, never mints — but locally
+# tracked ops may have minted one) cannot collide with a server-side one.
+# Adopted foreign tokens keep their exact string (bind_version); tokens
+# stay valid Python identifiers for export_script.
+_PROC_NONCE = secrets.token_hex(4)
 _SIDE_VERSIONS: Dict[int, str] = {}
 _SIDE_RECORDS: Dict[int, Tuple[ProvRecord, ...]] = {}
 # version token -> weakref (or pinned object), for export_script root
@@ -161,22 +173,108 @@ def version_of(obj: Any) -> str:
     a fresh object (e.g. from ``Graph.add_edges``) gets a fresh token — the
     provenance dual of the plan-cache invalidation-by-construction contract.
     """
+    global _NEXT_VERSION
     with _LOCK:
         v = getattr(obj, "_prov_version", None)
         if v is None:
             v = _SIDE_VERSIONS.get(id(obj))
         if v is not None:
             return v
-        v = f"{_kind_prefix(obj)}{next(_COUNTER)}"
-        if not _try_setattr(obj, "_prov_version", v):
-            _side_put(_SIDE_VERSIONS, obj, v)
-        try:
-            _BY_VERSION[v] = weakref.ref(obj, lambda _, v=v: _BY_VERSION.pop(v, None))
-        except TypeError:
-            # no weakref support: the object is either attr-carrying (rare)
-            # or already pinned in the strong ring by _side_put
-            _BY_VERSION[v] = (_PINNED, obj)
+        v = f"{_kind_prefix(obj)}{_NEXT_VERSION}x{_PROC_NONCE}"
+        _NEXT_VERSION += 1
+        _register_locked(obj, v)
         return v
+
+
+def _pop_version_if(v: str, ref: Any) -> None:
+    """Weakref death callback: drop the registry entry only if it is still
+    *this* reference — a token can be re-bound to a fresh object (wire
+    adoption re-binding a decoded copy), and the old object's death must
+    not evict the new binding."""
+    with _LOCK:
+        if _BY_VERSION.get(v) is ref:
+            del _BY_VERSION[v]
+
+
+def _register_locked(obj: Any, v: str) -> None:
+    if not _try_setattr(obj, "_prov_version", v):
+        _side_put(_SIDE_VERSIONS, obj, v)
+    cur = _BY_VERSION.get(v)
+    if cur is not None:
+        alive = cur[1] if isinstance(cur, tuple) and cur[0] is _PINNED \
+            else cur()
+        if alive is not None:
+            # first live binding wins: re-binding a token to a transient
+            # decoded copy (wire adoption) must not evict the original —
+            # both are the same value, and export roots need the one that
+            # stays alive (e.g. in a workspace mirror)
+            return
+    try:
+        _BY_VERSION[v] = weakref.ref(obj,
+                                     lambda r, v=v: _pop_version_if(v, r))
+    except TypeError:
+        # no weakref support: the object is either attr-carrying (rare)
+        # or already pinned in the strong ring by _side_put
+        _BY_VERSION[v] = (_PINNED, obj)
+
+
+def peek_version(obj: Any) -> Optional[str]:
+    """``obj``'s version token if one was ever assigned, else None.
+
+    Unlike :func:`version_of` this never mints: the wire layer uses it so a
+    *client-side* root ships without a token (the server assigns one and the
+    client binds to it) — a client-minted token could collide with tokens
+    the server already handed out.
+    """
+    with _LOCK:
+        v = getattr(obj, "_prov_version", None)
+        if v is None:
+            v = _SIDE_VERSIONS.get(id(obj))
+        return v
+
+
+def _token_num(token: str) -> Optional[int]:
+    digits = token.lstrip("tgav")
+    return int(digits) if digits.isdigit() else None
+
+
+def bind_version(obj: Any, token: str) -> str:
+    """Register ``obj`` under a version token minted in *another* process.
+
+    The wire protocol (:mod:`repro.serve.wire`) ships objects together with
+    their server-assigned version tokens; the receiving process binds its
+    deserialized copy to the same token so the provenance chain stays
+    self-consistent — ``object_for_version`` resolves chain roots to the
+    local copies and :func:`export_script` works on remotely computed
+    objects.  Minted tokens carry a per-process nonce so a foreign token
+    can never collide with a local one; for legacy nonce-less tokens the
+    counter is additionally advanced past the foreign token's number.
+    """
+    global _NEXT_VERSION
+    with _LOCK:
+        num = _token_num(token)
+        if num is not None and num >= _NEXT_VERSION:
+            _NEXT_VERSION = num + 1
+        _register_locked(obj, token)
+        return token
+
+
+def adopt_records(obj: Any, records: Sequence["ProvRecord"],
+                  token: Optional[str] = None) -> None:
+    """Attach a provenance chain deserialized from another process.
+
+    ``token`` is the producing process's version token for ``obj`` (defaults
+    to the final record's last output); it is bound via :func:`bind_version`
+    so downstream records referencing it keep resolving.  With no records
+    and no token this is a no-op.
+    """
+    recs = tuple(records)
+    if token is None and recs:
+        token = recs[-1].outputs[-1]
+    if token is not None:
+        bind_version(obj, token)
+    if recs:
+        _attach_records(obj, recs)
 
 
 def object_for_version(version: str) -> Optional[Any]:
@@ -253,6 +351,47 @@ def contains_opaque(canon: Any) -> bool:
     if isinstance(canon, tuple):
         return any(contains_opaque(x) for x in canon)
     return False
+
+
+# -- wire form (cross-process serving) --------------------------------------
+# Canonical params are already plain data except Opaque, which has no literal
+# form by definition; on the wire it becomes a tagged tuple and comes back as
+# a fresh Opaque (identity lost — exactly the semantics Opaque promises).
+
+_OPAQUE_TAG = "__opaque__"
+
+
+def _wire_val(v: Any) -> Any:
+    if isinstance(v, Opaque):
+        return (_OPAQUE_TAG, v.desc)
+    if isinstance(v, tuple):
+        return tuple(_wire_val(x) for x in v)
+    return v
+
+
+def _unwire_val(v: Any) -> Any:
+    if isinstance(v, tuple):
+        if len(v) == 2 and v[0] == _OPAQUE_TAG:
+            return Opaque(v[1])
+        return tuple(_unwire_val(x) for x in v)
+    return v
+
+
+def records_to_wire(records: Sequence[ProvRecord]) -> list:
+    """Provenance chain -> plain data (tuples/lists/scalars) for the codec."""
+    return [{"op": r.op, "inputs": tuple(r.inputs),
+             "params": _wire_val(r.params), "outputs": tuple(r.outputs),
+             "meta": _wire_val(r.meta)} for r in records]
+
+
+def records_from_wire(data: Iterable[Mapping[str, Any]]
+                      ) -> Tuple[ProvRecord, ...]:
+    return tuple(
+        ProvRecord(op=d["op"],
+                   inputs=tuple((n, v) for n, v in d["inputs"]),
+                   params=_unwire_val(tuple(d["params"])),
+                   outputs=tuple(d["outputs"]),
+                   meta=_unwire_val(tuple(d["meta"]))) for d in data)
 
 
 def _uncanonical(v: Any) -> Any:

@@ -179,13 +179,19 @@ class Workspace:
 
     def __init__(self):
         self._objs: Dict[str, Any] = {}
+        # name -> version token, written in the same critical section as
+        # _objs: reads of (object, version) pairs are always consistent,
+        # and update()'s CAS compares against it.
+        self._versions: Dict[str, str] = {}
         self._lock = threading.RLock()
 
     def put(self, name: str, obj: Any) -> str:
         """Bind ``name`` to ``obj``; returns the object's version token."""
         with self._lock:
             self._objs[name] = obj
-            return prov.version_of(obj)
+            v = prov.version_of(obj)
+            self._versions[name] = v
+            return v
 
     def get(self, name: str) -> Any:
         with self._lock:
@@ -195,6 +201,9 @@ class Workspace:
             return self._objs[name]
 
     def version(self, name: str) -> str:
+        with self._lock:
+            if name in self._versions:
+                return self._versions[name]
         return prov.version_of(self.get(name))
 
     def update(self, name: str, fn: Callable[[Any], Any]) -> str:
@@ -204,16 +213,27 @@ class Workspace:
         plan caches and service result caches keyed by the old token simply
         stop matching (invalidation by construction, never by broadcast).
 
-        ``fn`` runs *outside* the workspace lock (a big-graph rebuild must
-        not stall every other session's reads); concurrent updates to the
-        same name are last-writer-wins, which is safe because both results
-        are fresh immutable objects with fresh versions.
+        ``fn`` still runs *outside* the workspace lock (a big-graph rebuild
+        must not stall every other session's reads), but the read-modify-
+        write of the name→version map is a compare-and-swap: the new binding
+        only lands if ``name`` still holds the version the update read.
+        When a concurrent update (another thread, or another server
+        connection) won the race, ``fn`` re-runs against the fresh object —
+        no update is ever silently lost.  ``fn`` must therefore be pure.
         """
-        cur = self.get(name)
-        new = fn(cur)
-        with self._lock:
-            self._objs[name] = new
-            return prov.version_of(new)
+        while True:
+            with self._lock:
+                cur = self.get(name)
+                cur_ver = self._versions.get(name)
+            new = fn(cur)
+            with self._lock:
+                if self._versions.get(name) != cur_ver \
+                        or self._objs.get(name) is not cur:
+                    continue          # lost the race; redo against fresh
+                self._objs[name] = new
+                v = prov.version_of(new)
+                self._versions[name] = v
+                return v
 
     def names(self) -> List[str]:
         with self._lock:
@@ -297,6 +317,8 @@ class Pending:
         self.dispatched_at: Optional[float] = None
         self.completed_at: Optional[float] = None
         self._event = threading.Event()
+        self._cb_lock = threading.Lock()
+        self._callbacks: Optional[List[Callable[["Pending"], None]]] = []
 
     @property
     def latency_ms(self) -> Optional[float]:
@@ -319,6 +341,30 @@ class Pending:
         self.completed_at = time.perf_counter()
         self.done = True
         self._event.set()
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, None
+        for fn in cbs or ():
+            try:
+                fn(self)
+            except Exception:        # a dead callback must not poison the
+                pass                 # scheduler thread resolving us
+
+    def add_done_callback(self, fn: Callable[["Pending"], None]) -> None:
+        """Run ``fn(self)`` when resolved (immediately if already done).
+
+        This is the server's streaming hook: a socket connection registers a
+        callback that frames the result back to the client the moment the
+        scheduler resolves it — completion order, not submission order.
+        Callbacks run on the resolving thread; exceptions are swallowed.
+        """
+        with self._cb_lock:
+            if self._callbacks is not None:
+                self._callbacks.append(fn)
+                return
+        try:
+            fn(self)
+        except Exception:
+            pass
 
     def result(self, timeout: Optional[float] = None) -> Any:
         if not self.done:
@@ -399,13 +445,19 @@ class GraphService:
             self._worker_threads.append(t)
 
     def close(self) -> None:
-        """Stop background workers (no-op for inline services)."""
+        """Stop background workers, then drain whatever they left queued.
+
+        Without the drain, a thread already blocked in ``Pending.result()``
+        on a request the dying workers never reached would wait forever —
+        worker-backed services skip the inline drain in ``_ensure_progress``.
+        """
         self._stop.set()
         with self.scheduler._cond:
             self.scheduler._cond.notify_all()
         for t in self._worker_threads:
             t.join(timeout=5.0)
         self._worker_threads = []
+        self.scheduler.drain()
 
     # -- sessions -----------------------------------------------------------
     def session(self, name: str) -> Session:
@@ -418,6 +470,18 @@ class GraphService:
         """Scheduler-side accounting for one session (queue, deficit,
         engine-ms consumed, completions, rejections, expiries)."""
         return self.scheduler.session_stats(name)
+
+    def end_session(self, name: str) -> None:
+        """Drop a session's namespace and (if idle) its scheduler state.
+
+        Called by the socket server when a connection closes: without it,
+        every connection would leak a session namespace and a deficit-
+        round-robin ring entry for the life of the service.  Scheduler
+        state with queued or in-flight work survives until it drains.
+        """
+        with self._lock:
+            self._sessions.pop(name, None)
+        self.scheduler.forget_session(name)
 
     # -- submission ---------------------------------------------------------
     def submit(self, session: Session, request: Dict[str, Any]) -> Pending:
@@ -436,6 +500,16 @@ class GraphService:
             self.stats["requests"] += 1
         q = self._prepare(p)
         if q is not None:
+            # cache fast path: a repeated trial-and-error query resolves at
+            # submit, skipping admission and the scheduler round trip — it
+            # consumes no engine time, so there is nothing to admission-
+            # control or charge, and the serving path (local or wire) sees
+            # memory-speed latency.  The speculative probe must not count a
+            # miss: the authoritative lookup happens again at dispatch.
+            hit, found = self._cache_get(q.cache_key, count_miss=False)
+            if found:
+                self._finish(p, hit, cached=True)
+                return p
             self.scheduler.submit(q)
         return p
 
@@ -464,7 +538,7 @@ class GraphService:
         # order-insensitive: {"a":1,"b":2} and {"b":2,"a":1} are one key
         return (op, versions, tuple(sorted(canon, key=lambda kv: kv[0])))
 
-    def _cache_get(self, key: Optional[Tuple]):
+    def _cache_get(self, key: Optional[Tuple], count_miss: bool = True):
         if key is None:
             return None, False
         with self._lock:
@@ -472,7 +546,8 @@ class GraphService:
                 self._cache.move_to_end(key)
                 self.stats["cache_hits"] += 1
                 return self._cache[key], True
-            self.stats["cache_misses"] += 1
+            if count_miss:
+                self.stats["cache_misses"] += 1
             return None, False
 
     def _cache_put(self, key: Optional[Tuple], value: Any) -> None:

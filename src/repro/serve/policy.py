@@ -33,12 +33,15 @@ request deadline.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 __all__ = [
     "ServiceError",
     "RejectedError",
     "DeadlineExpired",
+    "RemoteError",
+    "error_to_wire",
+    "error_from_wire",
     "AdmissionPolicy",
     "FairSharePolicy",
     "BatchPolicy",
@@ -70,6 +73,65 @@ class DeadlineExpired(ServiceError):
     time it would run, the analyst has moved on, and executing it anyway
     only delays everyone else's fresh queries.
     """
+
+
+class RemoteError(ServiceError):
+    """A server-side failure of a type the wire cannot reconstruct.
+
+    The original exception type name is preserved in the message; the
+    client-visible contract is only that the request failed server-side.
+    """
+
+
+# ---------------------------------------------------------------------------
+# typed error frames: the service's error vocabulary knows its own wire form,
+# so admission-control semantics (RejectedError.retry_after, DeadlineExpired)
+# survive a cross-process hop intact and clients back off exactly as an
+# in-process caller would.
+# ---------------------------------------------------------------------------
+
+
+def error_to_wire(exc: BaseException) -> Dict[str, Any]:
+    """Typed-error payload for an exception crossing the wire."""
+    if isinstance(exc, KeyError) and len(exc.args) == 1 \
+            and isinstance(exc.args[0], str):
+        # str(KeyError) is the repr of its argument; ship the argument
+        # itself so the client-side KeyError has identical args
+        message = exc.args[0]
+    else:
+        message = str(exc)
+    payload: Dict[str, Any] = {"etype": type(exc).__name__,
+                               "message": message}
+    if isinstance(exc, RejectedError):
+        payload["retry_after"] = exc.retry_after
+    return payload
+
+
+def error_from_wire(payload: Dict[str, Any]) -> BaseException:
+    """Rebuild the client-side exception for a typed error payload.
+
+    Service errors come back as their own types (``RejectedError`` keeps its
+    ``retry_after``; ``DeadlineExpired`` stays catchable as such); lookup
+    failures stay ``KeyError`` so remote sessions mirror in-process ones.
+    Anything else becomes :class:`RemoteError` with the original type name
+    in the message.
+    """
+    etype = payload.get("etype", "Exception")
+    msg = str(payload.get("message", ""))
+    if etype == "RejectedError":
+        exc = RejectedError.__new__(RejectedError)
+        ServiceError.__init__(exc, msg)
+        exc.retry_after = float(payload.get("retry_after", 0.01))
+        return exc
+    if etype == "DeadlineExpired":
+        return DeadlineExpired(msg)
+    if etype == "ServiceError":
+        return ServiceError(msg)
+    if etype == "KeyError":
+        return KeyError(msg)   # error_to_wire shipped args[0] verbatim
+    if etype == "TimeoutError":
+        return TimeoutError(msg)
+    return RemoteError(f"{etype}: {msg}")
 
 
 @dataclass

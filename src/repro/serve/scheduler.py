@@ -108,6 +108,7 @@ class Scheduler:
         self._cond = threading.Condition(self._lock)
         self._sessions: Dict[str, _SessionState] = {}
         self._order: List[str] = []       # session insertion order (RR ring)
+        self._ended: set = set()          # forgotten-while-busy, reap later
         self._rr_last: Optional[str] = None
         self._seq = 0
         self._total_queued = 0
@@ -129,8 +130,63 @@ class Scheduler:
             return len(st.queue) if st else 0
 
     def session_stats(self, session: str) -> Dict[str, Any]:
+        """Accounting snapshot; never *creates* state (an unknown name —
+        e.g. a remote client probing — must not grow the DRR ring)."""
         with self._lock:
-            return self._state(session).snapshot()
+            st = self._sessions.get(session)
+            return st.snapshot() if st is not None \
+                else _SessionState(session).snapshot()
+
+    def forget_session(self, session: str) -> bool:
+        """Drop a session's scheduler state (connection teardown).
+
+        Returns False while the session still has queued or executing work
+        — accounting for in-flight requests must survive until
+        :meth:`_done` runs for them; the state is marked ended and reaped
+        by the final :meth:`_done` instead, so churned connections never
+        leak ring entries.
+        """
+        with self._lock:
+            return self._forget_locked(session, mark=True)
+
+    def _forget_locked(self, session: str, mark: bool = False) -> bool:
+        st = self._sessions.get(session)
+        if st is None:
+            self._ended.discard(session)
+            return True
+        if st.queue or st.inflight:
+            if mark:
+                self._ended.add(session)
+            return False
+        del self._sessions[session]
+        self._order.remove(session)
+        self._ended.discard(session)
+        if self._rr_last == session:
+            self._rr_last = None
+        return True
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until nothing is queued *or executing*; False on timeout.
+
+        :meth:`drain` only runs queued work inline — in worker mode a
+        request may be mid-engine on another thread when the queue empties.
+        Graceful server shutdown needs both gone before closing sockets,
+        so streamed results are never cut off.
+        """
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._cond:
+            while True:
+                busy = self._total_queued or any(
+                    st.inflight for st in self._sessions.values())
+                if not busy:
+                    return True
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cond.wait(timeout=0.1 if remaining is None
+                                else min(remaining, 0.1))
 
     # -- admission ----------------------------------------------------------
     def submit(self, q: QueuedRequest) -> None:
@@ -273,6 +329,8 @@ class Scheduler:
             if engine_ms > 0:
                 st.deficit_ms = max(st.deficit_ms - engine_ms, -fair.floor_ms)
                 self._est_ms = 0.8 * self._est_ms + 0.2 * engine_ms
+            if q.session in self._ended:   # connection gone: reap when idle
+                self._forget_locked(q.session)
             self._cond.notify_all()
 
     def _expire(self, q: QueuedRequest) -> None:

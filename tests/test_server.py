@@ -1,0 +1,402 @@
+"""Cross-process serving (serve/server.py + serve/client.py) over real
+sockets.
+
+Server and client run in one pytest process (loopback TCP, genuine frames)
+— the subprocess path is exercised by ``benchmarks/serve_smoke.py`` and
+``examples/remote_analytics.py``.  Covers the serving contract: the remote
+session mirrors the in-process API (values, errors, provenance), admission
+control crosses the wire typed (RejectedError.retry_after, DeadlineExpired),
+results stream back out-of-order by request id, shutdown drains, and
+concurrent independent clients share one workspace without trampling each
+other.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import provenance as P
+from repro.core.graph import Graph
+from repro.core.table import INT, STR, Table
+from repro.data.rmat import rmat_edges
+from repro.serve.client import RemoteService
+from repro.serve.graph_service import GraphService, Workspace
+from repro.serve.policy import (AdmissionPolicy, DeadlineExpired,
+                                RejectedError, SchedulerPolicy, ServiceError)
+from repro.serve.server import GraphServer
+
+
+def rmat_graph(scale=7, edge_factor=4, seed=0):
+    s, d = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
+    return Graph.from_edges(s, d)
+
+
+@pytest.fixture
+def served():
+    """(server, client) around an inline (workers=0) service with a graph.
+
+    Inline mode keeps scheduling deterministic — results resolve at flush,
+    which the remote client drives exactly like an in-process caller.
+    """
+    svc = GraphService(workers=0)
+    svc.workspace.put("g", rmat_graph())
+    server = GraphServer(svc).start()
+    client = RemoteService(port=server.port, timeout=120.0)
+    yield server, client
+    client.close()
+    server.shutdown()
+
+
+@pytest.fixture
+def served_workers():
+    """(server, client) around a worker-backed (streaming) service."""
+    svc = GraphService(workers=2)
+    svc.workspace.put("g", rmat_graph())
+    server = GraphServer(svc).start()
+    client = RemoteService(port=server.port, timeout=120.0)
+    yield server, client
+    client.close()
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# workspace / session mirroring
+# ---------------------------------------------------------------------------
+
+
+def test_remote_workspace_put_get_version(served):
+    server, client = served
+    t = Table.from_columns({"x": INT, "s": STR},
+                           {"x": [3, 1], "s": ["b", "a"]})
+    v = client.workspace.put("t", t)
+    assert client.workspace.version("t") == v
+    assert P.peek_version(t) == v          # local root bound to server token
+    assert set(client.workspace.names()) == {"g", "t"}
+    back = client.workspace.get("t")
+    assert back.to_pydict() == t.to_pydict()
+    # and the server really holds it (shared workspace, not a client echo)
+    assert server.service.workspace.get("t").to_pydict() == t.to_pydict()
+    with pytest.raises(KeyError):
+        client.workspace.get("nope")
+
+
+def test_remote_update_refused_with_clear_error(served):
+    _, client = served
+    with pytest.raises(ServiceError, match="wire"):
+        client.workspace.update("g", lambda g: g)
+
+
+def test_remote_session_isolation_and_publish(served):
+    server, client = served
+    sess = client.session("alice")
+    t = Table.from_columns({"x": INT}, {"x": [1, 2]})
+    sess.put("mine", t)
+    assert sess.local_names() == ["mine"]
+    # another connection with the SAME session name must not see it
+    other = RemoteService(port=server.port)
+    try:
+        with pytest.raises(KeyError):
+            other.session("alice").get("mine")
+        sess.publish("mine")
+        assert other.session("alice").get("mine").to_pydict() == \
+            t.to_pydict()
+    finally:
+        other.close()
+
+
+def test_execute_mirrors_in_process_values(served):
+    _, client = served
+    sess = client.session("s")
+    remote = sess.execute({"op": "pagerank", "graph": "g",
+                           "params": {"n_iter": 10}, "as": "pr"})
+    local_svc = GraphService()
+    local_svc.workspace.put("g", rmat_graph())
+    local = local_svc.session("s").execute(
+        {"op": "pagerank", "graph": "g", "params": {"n_iter": 10}})
+    np.testing.assert_allclose(np.asarray(remote), np.asarray(local),
+                               rtol=1e-6)
+    # the "as" binding lives server-side and reads back identically
+    np.testing.assert_array_equal(np.asarray(sess.get("pr")),
+                                  np.asarray(remote))
+
+
+def test_multi_output_op_roundtrip(served):
+    _, client = served
+    hub, auth = client.session("s").execute(
+        {"op": "hits", "graph": "g", "params": {"n_iter": 5}})
+    assert hub.shape == auth.shape
+    assert [r.op for r in P.records_of(auth)] == ["algorithms.hits"]
+
+
+def test_cached_and_fused_flags_cross_the_wire(served):
+    _, client = served
+    sess = client.session("s")
+    p1 = sess.submit({"op": "bfs", "graph": "g", "params": {"source": 0}})
+    p2 = sess.submit({"op": "bfs", "graph": "g", "params": {"source": 1}})
+    client.flush()
+    assert p1.result(60) is not None and p2.result(60) is not None
+    assert p1.fused and p2.fused
+    p3 = sess.submit({"op": "bfs", "graph": "g", "params": {"source": 0}})
+    client.flush()
+    p3.result(60)
+    assert p3.cached
+    stats = client.stats
+    assert stats["cache_hits"] >= 1 and stats["fused_requests"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# typed errors over the wire
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_op_raises_service_error_at_submit(served):
+    _, client = served
+    with pytest.raises(ServiceError, match="unknown op"):
+        client.session("s").submit({"op": "frobnicate", "graph": "g"})
+
+
+def test_missing_name_resolves_keyerror_like_in_process(served):
+    _, client = served
+    p = client.session("s").submit({"op": "pagerank", "graph": "ghost"})
+    with pytest.raises(KeyError, match="ghost"):
+        p.result(60)
+
+
+def test_admission_rejection_carries_retry_after(served):
+    server, client = served
+    server.service.policy.admission.inflight_overrides["c1/greedy"] = 2
+    sess = client.session("greedy")
+    ok = [sess.submit({"op": "pagerank", "graph": "g",
+                       "params": {"n_iter": 2}}) for _ in range(2)]
+    with pytest.raises(RejectedError) as ei:
+        sess.submit({"op": "pagerank", "graph": "g", "params": {"n_iter": 2}})
+    assert ei.value.retry_after > 0
+    client.flush()
+    for p in ok:
+        assert p.result(60) is not None
+
+
+def test_deadline_expired_crosses_the_wire(served):
+    _, client = served
+    sess = client.session("s")
+    p = sess.submit({"op": "pagerank", "graph": "g",
+                     "params": {"n_iter": 2}, "deadline_ms": 0.0})
+    time.sleep(0.01)
+    client.flush()
+    with pytest.raises(DeadlineExpired):
+        p.result(60)
+
+
+# ---------------------------------------------------------------------------
+# streaming: completion order, not call order
+# ---------------------------------------------------------------------------
+
+
+def test_results_stream_out_of_order(served):
+    _, client = served
+    sess = client.session("s")
+    # first submit stays queued (inline server, nothing drains it yet)...
+    slow = sess.submit({"op": "pagerank", "graph": "g",
+                        "params": {"n_iter": 5}})
+    # ...second resolves at submit time (name error) -> its RESULT frame
+    # arrives while the earlier request is still pending
+    fast = sess.submit({"op": "pagerank", "graph": "missing"})
+    deadline = time.monotonic() + 30
+    while not fast.done and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert fast.done and not slow.done
+    client.flush()
+    assert slow.result(60) is not None
+    with pytest.raises(KeyError):
+        fast.result(60)
+
+
+def test_worker_server_streams_without_flush(served_workers):
+    _, client = served_workers
+    sess = client.session("s")
+    ps = [sess.submit({"op": "bfs", "graph": "g", "params": {"source": i}})
+          for i in range(4)]
+    for p in ps:                    # no flush: worker threads resolve
+        assert p.result(120) is not None
+
+
+# ---------------------------------------------------------------------------
+# provenance equivalence + export round trip (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def expert_workload(service):
+    """Compact §4.1-style chain: select -> to_graph -> pagerank -> table."""
+    posts = Table.from_columns(
+        {"src": INT, "dst": INT, "Tag": STR},
+        {"src": [0, 1, 2, 3, 0, 4], "dst": [1, 2, 0, 0, 2, 1],
+         "Tag": ["java", "java", "java", "python", "java", "java"]})
+    service.workspace.put("posts", posts)
+    sess = service.session("analyst")
+    sess.execute({"op": "select", "table": "posts",
+                  "params": {"col": "Tag", "op": "==", "value": "java"},
+                  "as": "jp"})
+    sess.execute({"op": "to_graph", "table": "jp",
+                  "params": {"src_col": "src", "dst_col": "dst"}, "as": "qg"})
+    sess.execute({"op": "pagerank", "graph": "qg",
+                  "params": {"n_iter": 15}, "as": "pr"})
+    return sess.execute({"op": "table_from_map", "graph": "qg",
+                         "scores": "pr",
+                         "params": {"key_name": "User",
+                                    "value_name": "Scr"}})
+
+
+def test_remote_equals_in_process_values_and_provenance(served):
+    _, client = served
+    remote = expert_workload(client)
+    local = expert_workload(GraphService())
+    np.testing.assert_array_equal(remote.column_np("User"),
+                                  local.column_np("User"))
+    np.testing.assert_allclose(remote.column_np("Scr"),
+                               local.column_np("Scr"), rtol=1e-6)
+    assert [r.op for r in P.records_of(remote)] == \
+        [r.op for r in P.records_of(local)]
+
+
+def test_export_script_of_remote_result_reexecutes(served, tmp_path):
+    _, client = served
+    remote = expert_workload(client)
+    script = P.export_script(remote)
+    path = tmp_path / "remote_export.py"
+    path.write_text(script)
+    ns = {}
+    exec(compile(script, str(path), "exec"), ns)
+    rebuilt = ns["rebuild"]()
+    np.testing.assert_allclose(rebuilt.column_np("Scr"),
+                               remote.column_np("Scr"), rtol=1e-6)
+
+
+def test_put_back_remote_result_keeps_chain(served):
+    """hits -> put the authority vector back -> table_from_map provenance."""
+    _, client = served
+    sess = client.session("s")
+    sess.execute({"op": "hits", "graph": "g", "params": {"n_iter": 5},
+                  "as": "h"})
+    _, auth = sess.get("h")
+    sess.put("auth", auth)
+    out = sess.execute({"op": "table_from_map", "graph": "g",
+                        "scores": "auth",
+                        "params": {"key_name": "User",
+                                   "value_name": "A"}})
+    ops = [r.op for r in P.records_of(out)]
+    assert "algorithms.hits" in ops and ops[-1] == "convert.table_from_map"
+
+
+# ---------------------------------------------------------------------------
+# concurrent independent clients
+# ---------------------------------------------------------------------------
+
+
+def test_two_clients_share_workspace_and_fair_share_sees_two_sessions(
+        served_workers):
+    server, client1 = served_workers
+    client2 = RemoteService(port=server.port)
+    try:
+        results = {}
+
+        def work(tag, cli):
+            sess = cli.session("w")
+            vals = [sess.execute({"op": "bfs", "graph": "g",
+                                  "params": {"source": s}})
+                    for s in ((0, 2, 4) if tag == "a" else (1, 3, 5))]
+            results[tag] = vals
+
+        t1 = threading.Thread(target=work, args=("a", client1))
+        t2 = threading.Thread(target=work, args=("b", client2))
+        t1.start(); t2.start(); t1.join(60); t2.join(60)
+        assert len(results["a"]) == 3 and len(results["b"]) == 3
+        # distinct principals server-side: same client session name, two
+        # connection-scoped scheduler sessions
+        s1 = client1.session_stats("w")
+        s2 = client2.session_stats("w")
+        assert s1["completed"] == 3 and s2["completed"] == 3
+    finally:
+        client2.close()
+
+
+def test_two_client_publish_race_stays_consistent(served):
+    """Concurrent puts/publishes from two connections: every write lands,
+    the name->version map never goes stale (regression for the workspace
+    read-modify-write race)."""
+    server, client1 = served
+    client2 = RemoteService(port=server.port)
+    try:
+        def hammer(cli, base):
+            sess = cli.session("w")
+            for i in range(8):
+                name = f"t{base + i}"
+                sess.put(name, Table.from_columns({"x": INT},
+                                                  {"x": [base + i]}))
+                sess.publish(name)
+
+        t1 = threading.Thread(target=hammer, args=(client1, 100))
+        t2 = threading.Thread(target=hammer, args=(client2, 200))
+        t1.start(); t2.start(); t1.join(60); t2.join(60)
+        names = server.service.workspace.names()
+        assert {f"t{100 + i}" for i in range(8)} <= set(names)
+        assert {f"t{200 + i}" for i in range(8)} <= set(names)
+        for i in range(8):
+            ws = server.service.workspace
+            assert ws.version(f"t{100 + i}") == \
+                P.version_of(ws.get(f"t{100 + i}"))
+    finally:
+        client2.close()
+
+
+def test_disconnect_cleans_up_sessions(served):
+    server, _ = served
+    extra = RemoteService(port=server.port)
+    sess = extra.session("temp")
+    sess.execute({"op": "pagerank", "graph": "g", "params": {"n_iter": 2}})
+    key = f"{extra.conn_id}/temp"
+    assert key in server.service._sessions
+    extra.close()
+    deadline = time.monotonic() + 10
+    while key in server.service._sessions and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert key not in server.service._sessions
+
+
+# ---------------------------------------------------------------------------
+# shutdown drains
+# ---------------------------------------------------------------------------
+
+
+def test_graceful_shutdown_drains_pending_work():
+    svc = GraphService(workers=0)          # nothing drains until shutdown
+    svc.workspace.put("g", rmat_graph())
+    server = GraphServer(svc).start()
+    client = RemoteService(port=server.port)
+    ps = [client.session("s").submit({"op": "bfs", "graph": "g",
+                                      "params": {"source": s}})
+          for s in range(3)]
+    assert not any(p.done for p in ps)
+    server.shutdown()                      # drain flushes queued requests
+    for p in ps:
+        assert p.result(60) is not None   # RESULT frames flushed pre-close
+    client.close()
+
+
+def test_protocol_version_mismatch_rejected(served):
+    import socket as socketlib
+
+    from repro.serve import wire
+    server, _ = served
+    raw = socketlib.create_connection(("127.0.0.1", server.port))
+    try:
+        wire.send_frame(raw, wire.FrameType.REQUEST, 1,
+                        {"kind": "hello", "protocol": 999})
+        frame = wire.read_frame(raw)
+        assert frame is not None
+        ftype, _, payload = frame
+        assert ftype == wire.FrameType.ERROR
+        assert "protocol" in payload["message"]
+    finally:
+        raw.close()

@@ -629,3 +629,82 @@ def test_service_results_export_and_rebuild():
     rebuilt = ns["rebuild"]()
     np.testing.assert_array_equal(rebuilt.column_np("score"),
                                   tbl.column_np("score"))
+
+
+# ---------------------------------------------------------------------------
+# workspace thread-safety under concurrent connections (serving hardening)
+# ---------------------------------------------------------------------------
+
+
+def test_workspace_concurrent_updates_are_never_lost():
+    """Two writers doing functional updates must both land (CAS retry).
+
+    Regression for the read-modify-write race the socket server exposes:
+    with last-writer-wins semantics, two connections updating one name
+    concurrently silently dropped one side's edges.
+    """
+    ws = Workspace()
+    ws.put("g", Graph.from_edges([0], [1]))
+    n_threads, n_updates = 4, 6
+    errs = []
+
+    def bump(tid):
+        try:
+            for i in range(n_updates):
+                # every thread adds a unique edge; dedupe can't collapse them
+                ws.update("g", lambda g, t=tid, k=i:
+                          g.add_edges([1000 + t], [2000 + t * 100 + k]))
+        except Exception as e:                      # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=bump, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    assert not errs
+    final = ws.get("g")
+    assert final.n_edges == 1 + n_threads * n_updates
+    # name->version map stays consistent with the object it names
+    assert ws.version("g") == P.version_of(final)
+
+
+def test_workspace_update_restarts_against_fresh_object():
+    """A CAS loser re-runs fn against the winner's object, not the stale
+    snapshot it originally read."""
+    ws = Workspace()
+    ws.put("t", Table.from_columns({"x": INT}, {"x": [1]}))
+    seen = []
+    started = threading.Event()
+    proceed = threading.Event()
+
+    def slow_fn(t):
+        seen.append(t.n_valid)
+        started.set()
+        proceed.wait(30)                 # hold the update open...
+        return t.with_column_added("y", INT, np.zeros(t.n_valid, np.int32)) \
+            if "y" not in t.schema else t
+
+    slow = threading.Thread(target=lambda: ws.update("t", slow_fn))
+    slow.start()
+    started.wait(30)
+    # ...while a fast update wins the race
+    ws.update("t", lambda t: Table.from_columns({"x": INT}, {"x": [1, 2]}))
+    proceed.set()
+    slow.join(60)
+    assert seen[0] == 1 and seen[-1] == 2    # fn re-ran on the fresh table
+    assert ws.get("t").n_valid == 2
+
+
+def test_close_resolves_outstanding_requests():
+    """close() must drain what the dying workers left queued — a caller
+    blocked in result() against a worker-backed service would otherwise
+    wait forever (workers alive => no inline drain in _ensure_progress)."""
+    svc = make_service(workers=1)
+    s = svc.session("a")
+    ps = [s.submit({"op": "pagerank", "graph": "g",
+                    "params": {"n_iter": n}}) for n in (2, 3, 4, 5)]
+    svc.close()
+    for p in ps:
+        assert p.result(timeout=30) is not None

@@ -1,0 +1,273 @@
+"""Wire codec (serve/wire.py): framing, value round-trips, typed errors.
+
+Every frame/value kind the protocol defines round-trips bit-exactly; the
+reader rejects truncated frames and unknown protocol versions instead of
+guessing at byte alignment; typed error payloads rebuild the service's
+exception vocabulary (RejectedError keeps retry_after, DeadlineExpired stays
+catchable) on the far side.
+"""
+
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import provenance as P
+from repro.core.graph import Graph
+from repro.core.table import FLOAT, INT, STR, Table
+from repro.serve import wire
+from repro.serve.policy import (DeadlineExpired, RejectedError, RemoteError,
+                                ServiceError, error_from_wire, error_to_wire)
+
+
+def roundtrip(v, ftype=wire.FrameType.REQUEST, req_id=9):
+    chunks = wire.encode_frame(ftype, req_id, v)
+    ft, rid, out = wire.decode_frame(b"".join(bytes(c) for c in chunks))
+    assert ft == ftype and rid == req_id
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scalar / container values
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("v", [
+    None, True, False, 0, -1, 2**62, 3.25, float("inf"), "", "héllo wörld",
+    b"", b"\x00\xffraw", [], [1, "two", None], (),
+    (1, (2, "x")), {}, {"op": "pagerank", "params": {"n_iter": 20}},
+])
+def test_value_roundtrip(v):
+    assert roundtrip(v) == v
+
+
+def test_tuple_list_distinction_survives():
+    out = roundtrip({"t": (1, 2), "l": [1, 2]})
+    assert isinstance(out["t"], tuple) and isinstance(out["l"], list)
+
+
+def test_int_overflow_refused():
+    with pytest.raises(wire.WireError, match="int64"):
+        wire.encode_frame(1, 1, 2**70)
+
+
+def test_non_string_dict_keys_refused():
+    with pytest.raises(wire.WireError, match="keys must be str"):
+        wire.encode_frame(1, 1, {1: "x"})
+
+
+def test_unencodable_type_refused():
+    with pytest.raises(wire.WireError, match="no wire form"):
+        wire.encode_frame(1, 1, object())
+
+
+# ---------------------------------------------------------------------------
+# arrays: empty, >1MB, dtypes, zero-copy semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arr", [
+    np.zeros((0,), np.float32),
+    np.zeros((0, 4), np.int64),
+    np.arange(7, dtype=np.int32),
+    np.asarray(3.5, dtype=np.float64),               # 0-d scalar array
+    np.random.default_rng(0).normal(size=(513, 300)),  # > 1 MB float64
+    np.array([True, False, True]),
+])
+def test_array_roundtrip(arr):
+    out = roundtrip(arr)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_big_array_is_zero_copy_on_both_sides():
+    arr = np.random.default_rng(1).normal(size=(1 << 17,))  # 1 MiB
+    chunks = wire.encode_frame(2, 1, arr)
+    # encoder: the array's buffer is passed through as its own chunk
+    assert any(isinstance(c, memoryview) and c.nbytes == arr.nbytes
+               for c in chunks)
+    _, _, out = wire.decode_frame(b"".join(bytes(c) for c in chunks))
+    # decoder: the result aliases the frame buffer, hence read-only
+    assert not out.flags.writeable
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_object_dtype_refused():
+    with pytest.raises(wire.WireError, match="no wire form"):
+        wire.encode_frame(1, 1, np.array(["a", "b"], dtype=object))
+
+
+def test_jax_array_encodes_as_array():
+    import jax.numpy as jnp
+    out = roundtrip(jnp.arange(5, dtype=jnp.float32))
+    assert isinstance(out, np.ndarray)
+    np.testing.assert_array_equal(out, np.arange(5, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# tables (incl. string columns) and graphs
+# ---------------------------------------------------------------------------
+
+
+def test_table_roundtrip_string_columns():
+    t = Table.from_columns(
+        {"id": INT, "score": FLOAT, "tag": STR},
+        {"id": [3, 1, 2], "score": [0.5, 1.5, -2.0],
+         "tag": ["java", "python", "java"]})
+    out = roundtrip(t)
+    assert isinstance(out, Table)
+    assert out.schema.fields == t.schema.fields
+    assert out.to_pydict() == t.to_pydict()
+    np.testing.assert_array_equal(out.column_np("id"), t.column_np("id"))
+    assert out.strings("tag") == ["java", "python", "java"]
+    assert out.next_row_id == t.next_row_id
+    np.testing.assert_array_equal(np.asarray(out.row_ids[:3]),
+                                  np.asarray(t.row_ids[:3]))
+
+
+def test_empty_table_roundtrip():
+    t = Table.from_columns({"x": INT, "s": STR}, {"x": [], "s": []})
+    out = roundtrip(t)
+    assert len(out) == 0 and out.schema.names == ("x", "s")
+
+
+def test_graph_roundtrip():
+    src = np.array([0, 7, 7, 3], np.int32)
+    dst = np.array([7, 3, 0, 0], np.int32)
+    g = Graph.from_edges(src, dst)
+    out = roundtrip(g)
+    assert out.n_nodes == g.n_nodes and out.n_edges == g.n_edges
+    np.testing.assert_array_equal(np.asarray(out.node_ids),
+                                  np.asarray(g.node_ids))
+    s1, d1 = g.out_edges()
+    s2, d2 = out.out_edges()
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d1))
+
+
+# ---------------------------------------------------------------------------
+# typed error frames
+# ---------------------------------------------------------------------------
+
+
+def test_rejected_error_keeps_retry_after():
+    e = RejectedError("session 'u1' is at its in-flight quota (8)", 0.125)
+    out = error_from_wire(roundtrip(error_to_wire(e),
+                                    ftype=wire.FrameType.ERROR))
+    assert isinstance(out, RejectedError)
+    assert out.retry_after == pytest.approx(0.125)
+    assert "quota" in str(out)
+
+
+def test_deadline_expired_roundtrip():
+    out = error_from_wire(roundtrip(error_to_wire(
+        DeadlineExpired("spent its deadline in the queue"))))
+    assert isinstance(out, DeadlineExpired)
+
+
+def test_service_and_key_errors_roundtrip():
+    out = error_from_wire(roundtrip(error_to_wire(
+        ServiceError("unknown op 'frobnicate'"))))
+    assert isinstance(out, ServiceError) and not isinstance(
+        out, (RejectedError, DeadlineExpired))
+    key = error_from_wire(roundtrip(error_to_wire(KeyError("posts"))))
+    assert isinstance(key, KeyError) and key.args == ("posts",)
+    # messages containing quotes round-trip verbatim (str(KeyError) is the
+    # repr of its arg; the wire ships the arg itself)
+    msg = "no workspace object 'x'; have ['g']"
+    key2 = error_from_wire(roundtrip(error_to_wire(KeyError(msg))))
+    assert key2.args == (msg,)
+
+
+def test_unknown_exception_becomes_remote_error():
+    out = error_from_wire(roundtrip(error_to_wire(
+        ZeroDivisionError("division by zero"))))
+    assert isinstance(out, RemoteError)
+    assert "ZeroDivisionError" in str(out)
+
+
+# ---------------------------------------------------------------------------
+# framing: truncation, bad magic, unknown version, size bound
+# ---------------------------------------------------------------------------
+
+
+def full_frame(v=("x", [1, 2.5])):
+    return b"".join(bytes(c) for c in wire.encode_frame(1, 3, v))
+
+
+def test_truncated_frame_rejected():
+    buf = full_frame(np.arange(100, dtype=np.float64))
+    for cut in (4, 15, 17, len(buf) - 1):
+        with pytest.raises(wire.WireError, match="truncated|short header"):
+            wire.decode_frame(buf[:cut])
+
+
+def test_trailing_garbage_rejected():
+    with pytest.raises(wire.WireError):
+        wire.decode_frame(full_frame() + b"\x00")
+
+
+def test_bad_magic_rejected():
+    buf = bytearray(full_frame())
+    buf[0] ^= 0xFF
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.decode_frame(bytes(buf))
+
+
+def test_unknown_protocol_version_rejected():
+    buf = bytearray(full_frame())
+    buf[2] = wire.PROTOCOL_VERSION + 1    # version byte follows the magic
+    with pytest.raises(wire.WireError, match="protocol version"):
+        wire.decode_frame(bytes(buf))
+
+
+def test_unknown_value_tag_rejected():
+    head = struct.pack("!HBBQI", 0x5257, wire.PROTOCOL_VERSION, 1, 0, 1)
+    with pytest.raises(wire.WireError, match="unknown value tag"):
+        wire.decode_frame(head + b"\x7f")
+
+
+# ---------------------------------------------------------------------------
+# pack_object / unpack_object: provenance across the wire
+# ---------------------------------------------------------------------------
+
+
+def test_pack_object_ships_and_adopts_provenance():
+    from repro.core import relational as R
+    t = Table.from_columns({"x": INT}, {"x": [5, 1, 3]})
+    ordered = R.order(t, "x")
+    payload = roundtrip(wire.pack_object(ordered))
+    out = wire.unpack_object(payload)
+    assert out.to_pydict() == ordered.to_pydict()
+    ops = [r.op for r in P.records_of(out)]
+    assert ops == [r.op for r in P.records_of(ordered)]
+    # the adopted copy answers to the producer's version token
+    assert P.peek_version(out) == P.version_of(ordered)
+
+
+def test_pack_object_fresh_root_ships_tokenless():
+    t = Table.from_columns({"x": INT}, {"x": [1]})
+    payload = wire.pack_object(t)
+    assert payload["token"] is None       # receiver assigns the version
+    assert payload["records"] == []
+
+
+def test_pack_object_tuple_per_element_chains():
+    from repro.core import relational as R
+    t = Table.from_columns({"x": INT}, {"x": [2, 1]})
+    a, b = R.order(t, "x"), t
+    payload = roundtrip(wire.pack_object((a, b)))
+    out = wire.unpack_object(payload)
+    assert isinstance(out, tuple) and len(out) == 2
+    assert [r.op for r in P.records_of(out[0])] == \
+        [r.op for r in P.records_of(a)]
+
+
+def test_opaque_params_survive_records_wire():
+    rec = P.ProvRecord(op="x", inputs=(("t", "t1"),),
+                       params=(("w", P.Opaque("array(9999,):f32")),),
+                       outputs=("t2",), meta=())
+    data = roundtrip(P.records_to_wire([rec]))
+    back = P.records_from_wire(data)
+    assert isinstance(back[0].params[0][1], P.Opaque)
+    assert back[0].params[0][1].desc == "array(9999,):f32"
