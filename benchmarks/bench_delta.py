@@ -5,8 +5,10 @@
 script to diff them.  **Only hardware-independent speedup ratios are
 gated**; absolute numbers are printed for information but never fail:
 
-* gated — ``engine.bfs.speedup`` (frontier vs dense), ``service.
-  speedup_fused`` / ``speedup_fused_cached`` (vs sequential) and
+* gated — ``engine.bfs.speedup`` (frontier vs dense), ``engine.delta.
+  plan_patch_speedup`` / ``warm_pagerank_speedup`` / ``bfs_reseed_speedup``
+  (incremental vs from-scratch), ``service.speedup_fused`` /
+  ``speedup_fused_cached`` (vs sequential) and
   ``service.overload.p99_improvement`` (fair vs fifo).  Each compares two
   measurements from the *same run on the same machine*, so a
   differently-sized CI runner moves numerator and denominator together and
@@ -56,6 +58,15 @@ def _metrics(fname: str, data: dict) -> dict:
         if "speedup" in bfs:
             out["engine.bfs.speedup"] = (float(bfs["speedup"]), "higher",
                                          True)
+        delta = data.get("delta") or {}
+        for k in ("plan_patch_ms", "plan_rederive_ms", "cold_pagerank_ms",
+                  "warm_pagerank_ms", "cold_bfs_ms", "warm_bfs_ms"):
+            if k in delta:
+                out[f"engine.delta.{k}"] = (float(delta[k]), "lower", False)
+        for k in ("plan_patch_speedup", "warm_pagerank_speedup",
+                  "bfs_reseed_speedup"):
+            if k in delta:
+                out[f"engine.delta.{k}"] = (float(delta[k]), "higher", True)
     elif fname == "BENCH_service.json":
         for mode, blk in (data.get("modes") or {}).items():
             if "qps" in blk:

@@ -45,6 +45,23 @@ assert b["speedup"] >= 1.5, \
     f"frontier {b['frontier_ms']}ms)"
 print(f"engine gate OK: frontier BFS {b['speedup']}x vs dense")
 EOF
+# incremental-maintenance gates: on a 0.1% edge delta, plan patching must
+# beat full re-derivation >= 5x, and a warm-started pagerank refresh
+# (delta apply + patched plan + tol solve from the parent vector) must beat
+# the from-scratch refresh >= 2x — both same-run ratios, hardware-independent
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_engine.json"))["delta"]
+assert d["plan_patch_speedup"] >= 5.0, \
+    f"plan patch speedup {d['plan_patch_speedup']}x < 5x gate " \
+    f"(patch {d['plan_patch_ms']}ms, rederive {d['plan_rederive_ms']}ms)"
+assert d["warm_pagerank_speedup"] >= 2.0, \
+    f"warm pagerank refresh speedup {d['warm_pagerank_speedup']}x < 2x gate " \
+    f"(warm {d['warm_pagerank_ms']}ms, cold {d['cold_pagerank_ms']}ms)"
+print(f"delta gate OK: plan patch {d['plan_patch_speedup']}x, "
+      f"warm pagerank refresh {d['warm_pagerank_speedup']}x, "
+      f"bfs re-seed {d['bfs_reseed_speedup']}x")
+EOF
 # interactive service: concurrent-session throughput/latency on 2^15 RMAT
 # with/without fusion + caching (gate: fused_cached >= 2x sequential), plus
 # the overload run — 1 flooding session vs 8 interactive under fifo vs

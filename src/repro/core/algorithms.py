@@ -23,6 +23,7 @@ and returns per-node arrays (convertible back to tables via
 
 from __future__ import annotations
 
+import logging
 from typing import Optional, Tuple
 
 import jax
@@ -47,7 +48,13 @@ __all__ = [
     "core_numbers",
     "hits",
     "degree_histogram",
+    "incremental_sssp",
+    "incremental_bfs",
+    "incremental_connected_components",
+    "incremental_label_propagation",
 ]
+
+_log = logging.getLogger(__name__)
 
 _INF = jnp.float32(jnp.inf)
 
@@ -112,6 +119,8 @@ def _pagerank_body(ex, pr, damping, inv_deg, dangling):
 
 @track("algorithms.pagerank", "A.pagerank")
 def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85, *,
+             tol: Optional[float] = None,
+             init: Optional[jax.Array] = None,
              backend: Optional[str] = None,
              interpret: Optional[bool] = None) -> jax.Array:
     """Power-iteration PageRank with dangling-mass redistribution.
@@ -119,14 +128,24 @@ def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85, *,
     The SpMV inner loop is ``engine.pull(pr * inv_deg, "sum")`` — on the
     "bsr" backend that is the MXU-tiled BSR SpMV, on "pallas" the one-hot
     matmul segment sum, on "xla" a sorted segmented reduction.
+
+    With ``tol`` set, ``n_iter`` is ignored and the iteration runs until
+    the L1 residual between rounds drops to ``tol``.  ``init`` seeds the
+    iterate (default: uniform); PageRank is a contraction, so any seed
+    converges to the same vector under the ``tol`` rule — passing a parent
+    graph's vector after a small :class:`~repro.core.graph.EdgeDelta` is
+    the warm-start path, converging in a handful of rounds.
     """
     if g.n_nodes == 0:
         return jnp.zeros((0,), jnp.float32)
     plan, ex = _exec_for(g, backend, interpret)
-    pr0 = jnp.full((g.n_nodes,), 1.0 / g.n_nodes, dtype=jnp.float32)
-    return engine.fixpoint(ex, _pagerank_body, pr0, n_iter=n_iter,
-                           args=(jnp.float32(damping), plan.inv_out_deg,
-                                 plan.dangling))
+    pr0 = (jnp.asarray(init, jnp.float32) if init is not None
+           else jnp.full((g.n_nodes,), 1.0 / g.n_nodes, dtype=jnp.float32))
+    args = (jnp.float32(damping), plan.inv_out_deg, plan.dangling)
+    if tol is not None:
+        return engine.fixpoint(ex, _pagerank_body, pr0, tol=float(tol),
+                               max_iter=10_000, args=args)
+    return engine.fixpoint(ex, _pagerank_body, pr0, n_iter=n_iter, args=args)
 
 
 def _ppr_body(ex, pr, damping, inv_deg, dangling, restart):
@@ -145,6 +164,8 @@ def _ppr_capped_body(ex, st, damping, inv_deg, dangling, restart, cap):
 @track("algorithms.personalized_pagerank", "A.personalized_pagerank")
 def personalized_pagerank(g: Graph, source, n_iter=10,
                           damping: float = 0.85, *,
+                          tol: Optional[float] = None,
+                          init: Optional[jax.Array] = None,
                           backend: Optional[str] = None,
                           interpret: Optional[bool] = None) -> jax.Array:
     """Random-walk-with-restart PageRank personalized to ``source``.
@@ -157,6 +178,10 @@ def personalized_pagerank(g: Graph, source, n_iter=10,
     ``(k,)`` array of per-source iteration counts: the batch runs to the
     max and every row freezes at its own count, exactly matching a
     standalone run.
+
+    ``tol``/``init`` mirror :func:`pagerank`: run to L1-residual
+    convergence from ``init`` (default: the restart distribution) instead
+    of a fixed round count — the warm-start path after an edge delta.
     """
     if g.n_nodes == 0:
         return jnp.zeros((0,), jnp.float32)
@@ -164,6 +189,19 @@ def personalized_pagerank(g: Graph, source, n_iter=10,
     scalar = np.ndim(source) == 0
     sources = jnp.atleast_1d(jnp.asarray(source, dtype=jnp.int32))
     args = (jnp.float32(damping), plan.inv_out_deg, plan.dangling)
+
+    if tol is not None:
+        init_rows = None if init is None else jnp.atleast_2d(
+            jnp.asarray(init, jnp.float32))
+
+        def one_tol(s, i):
+            restart = jnp.zeros((g.n_nodes,), jnp.float32).at[s].set(1.0)
+            pr0 = restart if init_rows is None else init_rows[i]
+            return engine.fixpoint(ex, _ppr_body, pr0, tol=float(tol),
+                                   max_iter=10_000, args=(*args, restart))
+
+        prs = jax.vmap(one_tol)(sources, jnp.arange(sources.shape[0]))
+        return prs[0] if scalar else prs
 
     if np.ndim(n_iter) == 0:
         def one(s):
@@ -619,6 +657,138 @@ def label_propagation(g: Graph, n_iter: int = 20, *,
         ex = engine.get_exec(uplan, be, interpret=interpret)
         lab = engine.fixpoint(ex, _lp_body, labels0, n_iter=n_iter)
     return _undirected_ids_to_g(g, u, lab)
+
+
+# ---------------------------------------------------------------------------
+# incremental recomputation (delta-update path; see core/graph.EdgeDelta)
+#
+# Each helper answers "can the parent's result be reused?" and returns None
+# with a logged reason when it cannot — callers fall back to a cold run.
+# Soundness rests on monotonicity: for an *insert-only* delta the parent
+# fixpoint is a valid upper bound of the child fixpoint under a min
+# relaxation, so re-seeding the frontier with the inserted edges' endpoints
+# converges to exactly the from-scratch result.  Deletions can raise values,
+# which breaks the bound — they always fall back.
+# ---------------------------------------------------------------------------
+
+
+def _insert_only_info(g: Graph, op: str):
+    info = getattr(g, "_delta", None)
+    if info is None:
+        _log.info("incremental %s: graph has no delta lineage -> cold run", op)
+        return None
+    if not info.insert_only:
+        _log.info("incremental %s: delta deletes edges (parent result is "
+                  "no longer an upper bound) -> cold run", op)
+        return None
+    return info
+
+
+def incremental_sssp(g: Graph, source, parent_dist, *,
+                     weights: Optional[jax.Array] = None,
+                     n_iter=None) -> Optional[jax.Array]:
+    """Warm single-source shortest paths after an insert-only delta.
+
+    Re-seeds :func:`engine.frontier_fixpoint` from the parent's (fixpoint)
+    distance vector with the inserted edges' sources as the frontier: only
+    regions whose distance actually improves are re-relaxed.  Returns None
+    (caller runs cold) when unsound: deletions, weighted edges (the parent
+    vector's weight keying cannot be verified), a round cap (a capped run
+    is not a fixpoint), or a batched source.
+    """
+    info = _insert_only_info(g, "sssp")
+    if info is None:
+        return None
+    if weights is not None:
+        _log.info("incremental sssp: weighted run -> cold run")
+        return None
+    if n_iter is not None:
+        _log.info("incremental sssp: capped run is not a fixpoint -> cold run")
+        return None
+    if np.ndim(source) != 0:
+        _log.info("incremental sssp: batched sources -> cold run")
+        return None
+    if g.n_nodes == 0:
+        return jnp.zeros((0,), jnp.float32)
+    dist0 = jnp.asarray(parent_dist, jnp.float32)
+    mask = np.zeros((g.n_nodes,), bool)
+    mask[info.add_src] = True
+    return engine.frontier_fixpoint(g.plan(), dist0, jnp.asarray(mask),
+                                    weights=jnp.float32(1.0))
+
+
+def incremental_bfs(g: Graph, source, parent_levels, *,
+                    n_iter=None) -> Optional[jax.Array]:
+    """Warm BFS levels (unweighted :func:`incremental_sssp`); -1 unreachable."""
+    pd = jnp.asarray(parent_levels)
+    dist = incremental_sssp(
+        g, source, jnp.where(pd < 0, _INF, pd.astype(jnp.float32)),
+        n_iter=n_iter)
+    if dist is None:
+        return None
+    return jnp.where(jnp.isinf(dist), -1, dist.astype(jnp.int32))
+
+
+def incremental_connected_components(g: Graph, parent_labels
+                                     ) -> Optional[jax.Array]:
+    """Warm WCC labels after an insert-only delta.
+
+    Works in the undirected view's id space: the parent labels translate to
+    a valid upper bound (each vertex's label is the u-id of a member of its
+    own component), and the inserted edges' endpoints seed the frontier, so
+    only merging components are re-labeled.  Requires the plan's undirected
+    view to be a *patched* one (it carries its own delta lineage); when the
+    patch fell back to a rebuild there is no per-edge delta to seed from.
+    """
+    info = _insert_only_info(g, "connected_components")
+    if info is None:
+        return None
+    if g.n_nodes == 0:
+        return jnp.zeros((0,), jnp.int32)
+    u = g.plan().undirected()
+    uinfo = getattr(u, "_delta", None)
+    if uinfo is None:
+        _log.info("incremental connected_components: undirected view was "
+                  "rebuilt (no delta lineage) -> cold run")
+        return None
+    if u.n_nodes == 0:
+        return _undirected_ids_to_g(g, u, jnp.zeros((0,), jnp.int32))
+    # translate parent g-space labels to u-space: label -> original id ->
+    # u-dense id; the min-id member of every component is present in u
+    # (defensively: fall back to own id, still an upper bound)
+    orig_u = u.node_ids[: u.n_nodes]
+    gx = g.dense_of(orig_u)
+    lab_orig = g.original_of(jnp.asarray(parent_labels, jnp.int32)[gx])
+    pos = jnp.clip(u.dense_of(lab_orig), 0, u.n_nodes - 1)
+    own = jnp.arange(u.n_nodes, dtype=jnp.int32)
+    init_u = jnp.where(u.node_ids[pos] == lab_orig, pos, own).astype(jnp.int32)
+    mask = np.zeros((u.n_nodes,), bool)
+    mask[uinfo.add_src] = True
+    mask[uinfo.add_dst] = True
+    labels = engine.frontier_fixpoint(u.plan(), init_u, jnp.asarray(mask))
+    return _undirected_ids_to_g(g, u, labels)
+
+
+def incremental_label_propagation(g: Graph, parent_labels, n_iter: int = 20
+                                  ) -> Optional[jax.Array]:
+    """Warm min-label propagation after an insert-only delta.
+
+    Only sound when the round cap cannot bind: a capped LP result is not a
+    fixpoint (a label may travel further through an inserted edge than the
+    parent run's cap allowed).  With ``n_iter >= |V|`` the run is the
+    min-label fixpoint — component min-labels — which is exactly what
+    :func:`incremental_connected_components` computes.
+    """
+    info = _insert_only_info(g, "label_propagation")
+    if info is None:
+        return None
+    u = g.plan().undirected()
+    if int(n_iter) < u.n_nodes:
+        _log.info("incremental label_propagation: n_iter=%s < |V|=%d may cap "
+                  "the propagation (not a fixpoint) -> cold run",
+                  n_iter, u.n_nodes)
+        return None
+    return incremental_connected_components(g, parent_labels)
 
 
 @track("algorithms.closeness_centrality", "A.closeness_centrality")

@@ -22,6 +22,7 @@ Capacities are power-of-two bucketed like tables.
 
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -32,9 +33,85 @@ import numpy as np
 from .provenance import track, version_of
 from .table import next_capacity
 
-__all__ = ["Graph", "INVALID_ID"]
+__all__ = ["Graph", "EdgeDelta", "INVALID_ID"]
 
 INVALID_ID = np.iinfo(np.int32).max
+
+_log = logging.getLogger(__name__)
+
+
+@dataclass(frozen=True)
+class EdgeDelta:
+    """Batch of edge inserts/deletes in **original** node ids.
+
+    The unit of incremental maintenance (Ringo's dynamism story): applying a
+    delta via :meth:`Graph.apply_delta` yields a new graph whose traversal
+    plan can be *patched* from the parent's instead of re-derived, and whose
+    analytics can warm-start from the parent's results.  Deleting an edge
+    that does not exist is a no-op; inserted duplicates are deduped.
+    """
+
+    add_src: np.ndarray
+    add_dst: np.ndarray
+    del_src: np.ndarray
+    del_dst: np.ndarray
+
+    def __post_init__(self):
+        for name in ("add_src", "add_dst", "del_src", "del_dst"):
+            a = np.asarray(getattr(self, name), dtype=np.int32).reshape(-1)
+            object.__setattr__(self, name, a)
+        if self.add_src.shape != self.add_dst.shape:
+            raise ValueError("EdgeDelta add_src/add_dst length mismatch")
+        if self.del_src.shape != self.del_dst.shape:
+            raise ValueError("EdgeDelta del_src/del_dst length mismatch")
+
+    @classmethod
+    def inserts(cls, src, dst) -> "EdgeDelta":
+        empty = np.empty((0,), np.int32)
+        return cls(src, dst, empty, empty)
+
+    @classmethod
+    def deletes(cls, src, dst) -> "EdgeDelta":
+        empty = np.empty((0,), np.int32)
+        return cls(empty, empty, src, dst)
+
+    @property
+    def n_adds(self) -> int:
+        return int(self.add_src.shape[0])
+
+    @property
+    def n_dels(self) -> int:
+        return int(self.del_src.shape[0])
+
+    @property
+    def insert_only(self) -> bool:
+        return self.n_dels == 0
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"EdgeDelta(+{self.n_adds} edges, -{self.n_dels} edges)"
+
+
+@dataclass
+class _DeltaInfo:
+    """How a Graph was derived from its parent — fuel for plan patching.
+
+    Dense-id arrays in the **child** numbering (== parent numbering on the
+    fast path, which is the only path that records one of these).  The merged
+    edge lists are host-side copies of both CSR orders so the plan patch
+    never re-sorts on device.
+    """
+
+    parent: "Graph"
+    add_src: np.ndarray      # applied (deduped) inserts, out-order sorted
+    add_dst: np.ndarray
+    del_src: np.ndarray      # distinct deleted pairs
+    del_dst: np.ndarray
+    insert_only: bool        # no edge was actually removed
+    dirty: np.ndarray        # dense vertex ids touched by the delta
+    out_src: np.ndarray      # merged edges sorted by (src, dst)
+    out_dst: np.ndarray
+    in_src: np.ndarray       # merged edges sorted by (dst, src)
+    in_dst: np.ndarray
 
 
 @jax.tree_util.register_pytree_node_class
@@ -54,6 +131,10 @@ class Graph:
     # functional update methods return fresh Graph objects, so a stale plan
     # can never be observed.
     _plan: Optional[object] = field(default=None, repr=False, compare=False)
+    # Delta lineage (set by apply_delta's fast path).  Also not a pytree
+    # leaf: a Graph rebuilt inside jit loses its lineage and simply rebuilds
+    # its plan from scratch — correct, just not incremental.
+    _delta: Optional[_DeltaInfo] = field(default=None, repr=False, compare=False)
 
     # -- pytree ---------------------------------------------------------------
     def tree_flatten(self):
@@ -171,7 +252,10 @@ class Graph:
         """
         if self._plan is None:
             from .plan import GraphPlan  # local import: plan -> kernels -> graph
-            self._plan = GraphPlan.build(self)
+            if self._delta is not None:
+                self._plan = GraphPlan.patch(self, self._delta)
+            else:
+                self._plan = GraphPlan.build(self)
         return self._plan
 
     def invalidate_plan(self) -> None:
@@ -223,6 +307,146 @@ class Graph:
         return Graph.from_edges(os[keep].astype(np.int32),
                                 od[keep].astype(np.int32), dedupe=False)
 
+    @track("graph.apply_delta", "Graph.apply_delta")
+    def apply_delta(self, delta: EdgeDelta) -> "Graph":
+        """Batch edge inserts/deletes (original ids) -> new Graph.
+
+        Fast path — every insert endpoint is already a node — performs a
+        host-side sorted merge of both CSR orders (O(E + Δ log Δ) numpy
+        passes, no device re-sort) and records a ``_DeltaInfo`` so
+        :meth:`plan` can *patch* the parent's plan instead of re-deriving
+        it.  Inserts are deduped against the kept edges and themselves;
+        deleting a non-existent edge is a no-op (all duplicates of a
+        matched pair are removed, like :meth:`delete_edges`).
+
+        When an insert endpoint is a brand-new node the dense numbering
+        shifts, so we fall back to a full rebuild with a logged reason; the
+        child then carries no delta lineage and its plan is built cold.
+        """
+        n = self.n_nodes
+        valid = np.asarray(self.node_ids[:n]) if n else np.empty((0,), np.int32)
+        new_eps = np.concatenate([delta.add_src, delta.add_dst])
+        _, known = _dense_lookup(valid, new_eps)
+        if new_eps.size and not bool(np.all(known)):
+            n_new = int(np.unique(new_eps[~known]).size)
+            _log.info("apply_delta: %d new node id(s) in inserts -> full "
+                      "rebuild (dense numbering shifts)", n_new)
+            return self._apply_delta_rebuild(delta)
+
+        s, d = self.out_edges()
+        s64 = np.asarray(s).astype(np.int64)
+        d64 = np.asarray(d).astype(np.int64)
+        keys = (s64 << 32) | d64  # dense ids are non-negative: sorted, exact
+
+        # -- deletes: anti-join on dense pair keys (absent endpoints no-op) --
+        if delta.n_dels:
+            dp, ok_s = _dense_lookup(valid, delta.del_src)
+            dq, ok_d = _dense_lookup(valid, delta.del_dst)
+            ok = ok_s & ok_d
+            dkeys = np.unique((dp[ok] << 32) | dq[ok])
+            keep = ~_in_sorted(dkeys, keys)
+        else:
+            keep = np.ones(keys.shape, bool)
+        kept = keys[keep]
+        dropped = np.unique(keys[~keep])
+        n_deleted = int(keys.size - kept.size)
+
+        # -- inserts: dedupe, then merge into the sorted out-order list --
+        if delta.n_adds:
+            ai, _ = _dense_lookup(valid, delta.add_src)
+            aj, _ = _dense_lookup(valid, delta.add_dst)
+            akeys = np.unique((ai << 32) | aj)
+            akeys = akeys[~_in_sorted(kept, akeys)]
+        else:
+            akeys = np.empty((0,), np.int64)
+        merged = (np.insert(kept, np.searchsorted(kept, akeys), akeys)
+                  if akeys.size else kept)
+
+        # -- same merge in in-order (sorted by dst, then src) --
+        si, di = self.in_edges()
+        keys_in = (np.asarray(di).astype(np.int64) << 32) | \
+                  np.asarray(si).astype(np.int64)
+        if n_deleted:
+            dkeys_in = np.sort(((dropped & 0xFFFFFFFF) << 32) | (dropped >> 32))
+            kept_in = keys_in[~_in_sorted(dkeys_in, keys_in)]
+        else:
+            kept_in = keys_in
+        if akeys.size:
+            akeys_in = np.sort(((akeys & 0xFFFFFFFF) << 32) | (akeys >> 32))
+            merged_in = np.insert(kept_in, np.searchsorted(kept_in, akeys_in),
+                                  akeys_in)
+        else:
+            merged_in = kept_in
+
+        # -- rebuild the padded CSR arrays from the merged host lists --
+        e2 = int(merged.size)
+        node_cap = self.node_capacity
+        edge_cap = next_capacity(max(e2, 1))
+        m_src = (merged >> 32).astype(np.int32)
+        m_dst = (merged & 0xFFFFFFFF).astype(np.int32)
+        mi_dst = (merged_in >> 32).astype(np.int32)
+        mi_src = (merged_in & 0xFFFFFFFF).astype(np.int32)
+        out_idx = np.zeros((edge_cap,), np.int32)
+        out_idx[:e2] = m_dst
+        in_idx = np.zeros((edge_cap,), np.int32)
+        in_idx[:e2] = mi_src
+
+        child = Graph(n_nodes=n, n_edges=e2, node_ids=self.node_ids,
+                      out_ptr=jnp.asarray(_host_ptr(m_src, node_cap)),
+                      out_idx=jnp.asarray(out_idx),
+                      in_ptr=jnp.asarray(_host_ptr(mi_dst, node_cap)),
+                      in_idx=jnp.asarray(in_idx))
+        dirty = np.unique(np.concatenate([
+            akeys >> 32, akeys & 0xFFFFFFFF,
+            dropped >> 32, dropped & 0xFFFFFFFF])).astype(np.int32)
+        child._delta = _DeltaInfo(
+            parent=self,
+            add_src=(akeys >> 32).astype(np.int32),
+            add_dst=(akeys & 0xFFFFFFFF).astype(np.int32),
+            del_src=(dropped >> 32).astype(np.int32),
+            del_dst=(dropped & 0xFFFFFFFF).astype(np.int32),
+            insert_only=(n_deleted == 0),
+            dirty=dirty,
+            out_src=m_src, out_dst=m_dst, in_src=mi_src, in_dst=mi_dst)
+        return child
+
+    def _apply_delta_rebuild(self, delta: EdgeDelta) -> "Graph":
+        """Slow path: node set grows -> renumber and rebuild from scratch.
+
+        Node set = parent nodes (isolated ones included) + new insert
+        endpoints; delete/dedupe semantics match the fast path.
+        """
+        s, d = self.out_edges()
+        os = np.asarray(self.original_of(s)).astype(np.int64)
+        od = np.asarray(self.original_of(d)).astype(np.int64)
+        # original ids may be any int32, so mask the low word (injective on
+        # int32 pairs; only used for set membership, never for ordering)
+        keys = (os << 32) | (od & 0xFFFFFFFF)
+        if delta.n_dels:
+            dk = (delta.del_src.astype(np.int64) << 32) | \
+                 (delta.del_dst.astype(np.int64) & 0xFFFFFFFF)
+            keep = ~np.isin(keys, dk)
+        else:
+            keep = np.ones(keys.shape, bool)
+
+        valid = np.asarray(self.node_ids[: self.n_nodes]) \
+            if self.n_nodes else np.empty((0,), np.int32)
+        new_ids = np.union1d(valid, np.concatenate([delta.add_src,
+                                                    delta.add_dst]))
+        # orig -> dense is monotone, so the kept out-order list stays sorted
+        ks = np.searchsorted(new_ids, os[keep].astype(np.int32)).astype(np.int64)
+        kd = np.searchsorted(new_ids, od[keep].astype(np.int32)).astype(np.int64)
+        kept_keys = (ks << 32) | kd
+        ai = np.searchsorted(new_ids, delta.add_src).astype(np.int64)
+        aj = np.searchsorted(new_ids, delta.add_dst).astype(np.int64)
+        akeys = np.unique((ai << 32) | aj)
+        akeys = akeys[~_in_sorted(kept_keys, akeys)]
+        all_s = np.concatenate([ks, akeys >> 32]).astype(np.int32)
+        all_d = np.concatenate([kd, akeys & 0xFFFFFFFF]).astype(np.int32)
+        return Graph.from_dense_edges(
+            jnp.asarray(all_s), jnp.asarray(all_d), int(new_ids.size),
+            node_ids=jnp.asarray(new_ids.astype(np.int32)))
+
     @track("graph.to_undirected", "Graph.to_undirected")
     def to_undirected(self) -> "Graph":
         """Symmetrized simple graph (for triangles / k-core / WCC)."""
@@ -245,6 +469,32 @@ class Graph:
 # ---------------------------------------------------------------------------
 # internals — the sort-first building blocks
 # ---------------------------------------------------------------------------
+
+
+def _dense_lookup(valid: np.ndarray, q: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """(dense position, present?) of original ids in the sorted id table."""
+    q = np.asarray(q)
+    if valid.size == 0 or q.size == 0:
+        return np.zeros(q.shape, np.int64), np.zeros(q.shape, bool)
+    pos = np.minimum(np.searchsorted(valid, q), valid.size - 1)
+    return pos.astype(np.int64), valid[pos] == q
+
+
+def _in_sorted(haystack: np.ndarray, needles: np.ndarray) -> np.ndarray:
+    """Membership of needles in an ascending (possibly duplicated) array."""
+    if haystack.size == 0 or needles.size == 0:
+        return np.zeros(needles.shape, bool)
+    pos = np.minimum(np.searchsorted(haystack, needles), haystack.size - 1)
+    return haystack[pos] == needles
+
+
+def _host_ptr(rows: np.ndarray, node_cap: int) -> np.ndarray:
+    """CSR row pointers from sorted row ids — host-side counts + cumsum."""
+    counts = np.bincount(rows, minlength=node_cap)
+    ptr = np.zeros((node_cap + 1,), np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    return ptr.astype(np.int32)
 
 
 def _pad_ids(ids: jax.Array, cap: int) -> jax.Array:

@@ -50,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import Graph
+from .graph import EdgeDelta, Graph
 from ..kernels.segment_sum import DEFAULT_BLOCK, DEFAULT_CHUNK, chunk_layout
 
 __all__ = ["GraphPlan"]
@@ -84,6 +84,13 @@ class GraphPlan:
     _tri_triples: Dict = field(default_factory=dict, repr=False, compare=False)
     _chunks_in: Dict = field(default_factory=dict, repr=False, compare=False)
     _chunks_out: Dict = field(default_factory=dict, repr=False, compare=False)
+    # delta lineage (set by :meth:`patch` only): dense ids of the vertices
+    # the delta touched, the parent's plan, and the _DeltaInfo it came from
+    dirty_vertices: Optional[np.ndarray] = field(default=None, repr=False,
+                                                 compare=False)
+    _parent: Optional["GraphPlan"] = field(default=None, repr=False,
+                                           compare=False)
+    _info: Optional[object] = field(default=None, repr=False, compare=False)
 
     # -- construction -----------------------------------------------------------
     @classmethod
@@ -102,11 +109,58 @@ class GraphPlan:
                    out_deg=out_deg, in_deg=in_deg,
                    inv_out_deg=inv_out_deg, dangling=dangling)
 
+    @classmethod
+    def patch(cls, g: Graph, info) -> "GraphPlan":
+        """Derive the plan from the parent's instead of re-sorting.
+
+        ``info`` is the ``_DeltaInfo`` left by ``Graph.apply_delta``'s fast
+        path: it already holds the merged edge lists in both CSR orders as
+        host arrays, so the eager fields are direct uploads (no device
+        lexsort, no ``_row_of_edge`` searchsorted), and degrees are cheap
+        slices of the already-patched row pointers.  The lazy structures
+        below patch the parent's cached versions where that is sound
+        (undirected view, BSR tiles, weight permutation) and rebuild
+        otherwise.  ``dirty_vertices`` feeds incremental recomputation in
+        :mod:`repro.core.algorithms`.
+        """
+        parent = info.parent.plan()
+        out_deg = g.out_degrees()
+        in_deg = g.in_degrees()
+        out_deg_f = out_deg.astype(jnp.float32)
+        inv_out_deg = jnp.where(out_deg > 0,
+                                1.0 / jnp.maximum(out_deg_f, 1.0), 0.0)
+        return cls(graph=g, n_nodes=g.n_nodes, n_edges=g.n_edges,
+                   in_src=jnp.asarray(info.in_src),
+                   in_dst=jnp.asarray(info.in_dst),
+                   out_src=jnp.asarray(info.out_src),
+                   out_dst=jnp.asarray(info.out_dst),
+                   out_deg=out_deg, in_deg=in_deg,
+                   inv_out_deg=inv_out_deg, dangling=out_deg == 0,
+                   dirty_vertices=info.dirty, _parent=parent, _info=info)
+
     # -- lazy derived structures -------------------------------------------------
     def undirected(self) -> Graph:
-        """Symmetrized simple-graph view, built once per plan."""
+        """Symmetrized simple-graph view, built once per plan.
+
+        For an insert-only delta child this *patches* the parent's
+        undirected view via ``apply_delta`` (symmetrize the inserted
+        non-loop edges in original-id space) instead of re-symmetrizing the
+        whole graph — and the patched view carries its own delta lineage,
+        which is what lets connected-components warm-start.  Deletions fall
+        back to a full rebuild.
+        """
         if self._undirected is None:
-            self._undirected = self.graph.to_undirected()
+            info = self._info
+            if info is not None and info.insert_only:
+                osrc = np.asarray(self.graph.original_of(info.add_src))
+                odst = np.asarray(self.graph.original_of(info.add_dst))
+                keep = osrc != odst
+                self._undirected = self._parent.undirected().apply_delta(
+                    EdgeDelta.inserts(
+                        np.concatenate([osrc[keep], odst[keep]]),
+                        np.concatenate([odst[keep], osrc[keep]])))
+            else:
+                self._undirected = self.graph.to_undirected()
         return self._undirected
 
     def oriented(self) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -179,6 +233,12 @@ class GraphPlan:
         gather re-keys weights once per call.
         """
         if self._in_perm_out is None:
+            info = self._info
+            if info is not None:
+                p = _host_in_perm_out(info)
+                if p is not None:
+                    self._in_perm_out = jnp.asarray(p)
+                    return self._in_perm_out
             # sorting the in-order edge list by (src, dst) yields out order
             self._in_perm_out = jnp.lexsort((self.in_dst, self.in_src)) \
                 .astype(jnp.int32)
@@ -188,10 +248,14 @@ class GraphPlan:
             ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
         """Unweighted BSR tiles of M[dst, src] (the pull/SpMV layout)."""
         if block not in self._bsr:
-            from ..kernels.ops import edges_to_bsr
-            self._bsr[block] = edges_to_bsr(np.asarray(self.in_src),
-                                            np.asarray(self.in_dst),
-                                            self.n_nodes, block=block)
+            patched = self._patched_bsr(block, transpose=False)
+            if patched is not None:
+                self._bsr[block] = patched
+            else:
+                from ..kernels.ops import edges_to_bsr
+                self._bsr[block] = edges_to_bsr(np.asarray(self.in_src),
+                                                np.asarray(self.in_dst),
+                                                self.n_nodes, block=block)
         return self._bsr[block]
 
     def bsr_t(self, block: int = DEFAULT_BLOCK
@@ -205,21 +269,70 @@ class GraphPlan:
         path as the pull.
         """
         if block not in self._bsr_t:
-            from ..kernels.ops import edges_to_bsr
-            # edges_to_bsr(a, b) builds M[b, a]: pass (dst, src) for M[src, dst]
-            self._bsr_t[block] = edges_to_bsr(np.asarray(self.out_dst),
-                                              np.asarray(self.out_src),
-                                              self.n_nodes, block=block)
+            patched = self._patched_bsr(block, transpose=True)
+            if patched is not None:
+                self._bsr_t[block] = patched
+            else:
+                from ..kernels.ops import edges_to_bsr
+                # edges_to_bsr(a, b) builds M[b, a]: pass (dst, src) for M[src, dst]
+                self._bsr_t[block] = edges_to_bsr(np.asarray(self.out_dst),
+                                                  np.asarray(self.out_src),
+                                                  self.n_nodes, block=block)
         return self._bsr_t[block]
+
+    def _patched_bsr(self, block: int, transpose: bool):
+        """Parent tiles + scatter-add of the inserted edges, when sound.
+
+        Sound iff the delta is insert-only (a deleted pair's tile decrement
+        would need its parent multiplicity) and every inserted edge lands in
+        a tile the parent already materialized (tile *structure* unchanged,
+        so ``rows``/``cols`` and any derived triples are shared).  Inserts
+        are deduped by ``apply_delta``, so each adds exactly 1.0.
+        """
+        info = self._info
+        if info is None or not info.insert_only:
+            return None
+        parent = self._parent
+        cache = parent._bsr_t if transpose else parent._bsr
+        if block not in cache:
+            return None
+        tiles, rows, cols, nb = cache[block]
+        if info.add_src.size == 0:
+            return (tiles, rows, cols, nb)
+        if transpose:
+            rv, cv = info.add_src, info.add_dst   # M[src, dst]
+        else:
+            rv, cv = info.add_dst, info.add_src   # M[dst, src]
+        want = (rv // block).astype(np.int64) * nb + (cv // block)
+        pkeys = np.asarray(rows).astype(np.int64) * nb + np.asarray(cols)
+        if pkeys.size == 0:
+            return None
+        order = np.argsort(pkeys, kind="stable")
+        pos = np.minimum(np.searchsorted(pkeys[order], want), pkeys.size - 1)
+        if not bool(np.all(pkeys[order][pos] == want)):
+            return None  # an insert opens a brand-new tile -> rebuild
+        tidx = order[pos]
+        new_tiles = tiles.at[jnp.asarray(tidx),
+                             jnp.asarray(rv % block),
+                             jnp.asarray(cv % block)].add(1.0)
+        return (new_tiles, rows, cols, nb)
 
     def tri_triples(self, block: int = DEFAULT_BLOCK
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """Tile triples (I,J),(I,K),(K,J) for the BSR triangle kernel."""
         if block not in self._tri_triples:
-            from ..kernels.ops import build_block_triples
             _, rows, cols, _ = self.bsr(block)
-            self._tri_triples[block] = build_block_triples(np.asarray(rows),
-                                                           np.asarray(cols))
+            parent = self._parent
+            if parent is not None and block in parent._tri_triples \
+                    and block in parent._bsr \
+                    and parent._bsr[block][1] is rows:
+                # patched BSR kept the parent's tile structure -> the
+                # (I,J),(I,K),(K,J) triples are byte-identical
+                self._tri_triples[block] = parent._tri_triples[block]
+            else:
+                from ..kernels.ops import build_block_triples
+                self._tri_triples[block] = build_block_triples(
+                    np.asarray(rows), np.asarray(cols))
         return self._tri_triples[block]
 
     def chunk_layout_in(self, chunk: int = DEFAULT_CHUNK):
@@ -235,6 +348,21 @@ class GraphPlan:
             self._chunks_out[chunk] = _device_layout(
                 chunk_layout(np.asarray(self.out_src), self.n_nodes, chunk))
         return self._chunks_out[chunk]
+
+
+def _host_in_perm_out(info) -> Optional[np.ndarray]:
+    """Host-side weight permutation from the delta's merged edge lists.
+
+    The in-order list is ascending in ``(dst, src)``, so the in-order slot
+    of each out-order edge is one searchsorted over 64-bit pair keys — no
+    device lexsort.  Duplicate edges make the key->slot map ambiguous;
+    return None so the caller falls back to the stable lexsort.
+    """
+    ki = (info.in_dst.astype(np.int64) << 32) | info.in_src.astype(np.int64)
+    if ki.size and bool(np.any(ki[1:] == ki[:-1])):
+        return None
+    ko = (info.out_dst.astype(np.int64) << 32) | info.out_src.astype(np.int64)
+    return np.searchsorted(ki, ko).astype(np.int32)
 
 
 def _device_layout(layout):

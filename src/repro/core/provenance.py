@@ -326,6 +326,14 @@ def canonical_value(v: Any) -> Any:
         return int(v)
     if isinstance(v, (np.floating,)):
         return float(v)
+    from .graph import EdgeDelta  # lazy: graph imports this module at load
+    if isinstance(v, EdgeDelta):
+        # small deltas embed as literals (replayable/exportable update
+        # chains); oversized ones carry Opaque components and stay
+        # uncacheable, like any big array param
+        return ("edge_delta",
+                canonical_value(v.add_src), canonical_value(v.add_dst),
+                canonical_value(v.del_src), canonical_value(v.del_dst))
     if isinstance(v, np.ndarray) or (hasattr(v, "dtype") and hasattr(v, "shape")):
         arr = np.asarray(v)
         if arr.ndim == 0:
@@ -402,6 +410,9 @@ def _uncanonical(v: Any) -> Any:
         import jax.numpy as jnp
         _, dtype, shape, vals = v
         return jnp.asarray(np.asarray(vals, dtype=dtype).reshape(shape))
+    if isinstance(v, tuple) and v and v[0] == "edge_delta":
+        from .graph import EdgeDelta
+        return EdgeDelta(*(np.asarray(_uncanonical(x)) for x in v[1:]))
     if isinstance(v, tuple) and v and v[0] == "tuple":
         return tuple(_uncanonical(x) for x in v[1])
     if isinstance(v, tuple) and v and v[0] == "dict":
@@ -417,6 +428,10 @@ def _literal(v: Any) -> str:
         _, dtype, shape, vals = v
         return (f"jnp.asarray(np.asarray({list(vals)!r}, "
                 f"dtype={dtype!r}).reshape({tuple(shape)!r}))")
+    if isinstance(v, tuple) and v and v[0] == "edge_delta":
+        a_s, a_d, d_s, d_d = (_literal(x) for x in v[1:])
+        return (f"EdgeDelta(add_src={a_s}, add_dst={a_d}, "
+                f"del_src={d_s}, del_dst={d_d})")
     if isinstance(v, tuple) and v and v[0] == "tuple":
         inner = ", ".join(_literal(x) for x in v[1])
         comma = "," if len(v[1]) == 1 else ""
@@ -599,7 +614,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.table import Table
-from repro.core.graph import Graph
+from repro.core.graph import EdgeDelta, Graph
 from repro.core import relational as R
 from repro.core import algorithms as A
 from repro.core import convert as C

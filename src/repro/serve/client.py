@@ -345,7 +345,34 @@ class RemoteWorkspace:
     def update(self, name: str, fn: Any) -> str:
         raise ServiceError(
             "functional updates cannot cross the wire (callables have no "
-            "wire form); run updates server-side or put() a fresh object")
+            "wire form); run updates server-side, put() a fresh object, or "
+            "apply_delta() for edge inserts/deletes")
+
+    def apply_delta(self, name: str, delta: Any) -> str:
+        """Apply an :class:`~repro.core.graph.EdgeDelta` to a workspace
+        graph server-side; returns the new version token.
+
+        The one functional update with a wire form: the delta ships as four
+        plain arrays and the server runs ``Workspace.apply_delta``, so the
+        published child keeps its delta lineage — plan patching, cache
+        retention and warm-start recomputation behave exactly as for an
+        in-process update.  The local mirror (if any) is refreshed too, so
+        ``export_script`` root embedding keeps working after updates.
+        """
+        import numpy as np
+        reply = self.service._rpc(
+            "ws_apply_delta", name=name,
+            add_src=np.asarray(delta.add_src, np.int32),
+            add_dst=np.asarray(delta.add_dst, np.int32),
+            del_src=np.asarray(delta.del_src, np.int32),
+            del_dst=np.asarray(delta.del_dst, np.int32))
+        version = reply["version"]
+        if name in self._mirror:
+            from ..core import provenance as prov
+            new = self._mirror[name].apply_delta(delta)
+            prov.bind_version(new, version)
+            self._mirror[name] = new
+        return version
 
     def __contains__(self, name: str) -> bool:
         return name in self.names()

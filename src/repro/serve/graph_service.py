@@ -29,7 +29,14 @@ ROADMAP's "serve heavy multi-user traffic" north star grows from:
     * a **result cache** keyed by ``(object version, op, canonicalized
       params)``: repeated trial-and-error queries are free until the object
       changes.  Version tokens come from :mod:`repro.core.provenance`;
-      because updates are functional, a stale hit is impossible.
+      because updates are functional, a stale hit is impossible;
+    * **delta-aware incremental maintenance**: after
+      :meth:`Workspace.apply_delta` publishes a graph's insert-only child,
+      cache entries the delta provably cannot change are re-bound to the
+      new version (retention — the query never re-executes), and queries
+      that must re-execute warm-start from the parent version's cached
+      result (frontier re-seeding for traversals/labels, warm power
+      iteration for pagerank) instead of running cold.
 
 Requests are submitted with :meth:`GraphService.submit` (returns a
 :class:`Pending`) and flow through the load-aware scheduler
@@ -49,6 +56,7 @@ sequential use.  All entry points are thread-safe.
 
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from collections import OrderedDict
@@ -62,14 +70,17 @@ from ..core import algorithms as A
 from ..core import convert as C
 from ..core import provenance as prov
 from ..core import relational as R
-from ..core.graph import Graph
+from ..core.graph import EdgeDelta, Graph
 from ..core.table import Table
 from .policy import (DeadlineExpired, RejectedError, SchedulerPolicy,
                      ServiceError)
 from .scheduler import QueuedRequest, Scheduler
 
-__all__ = ["Workspace", "Session", "GraphService", "Pending", "ServiceError",
-           "RejectedError", "DeadlineExpired", "SchedulerPolicy"]
+__all__ = ["Workspace", "Session", "GraphService", "Pending", "EdgeDelta",
+           "ServiceError", "RejectedError", "DeadlineExpired",
+           "SchedulerPolicy"]
+
+_log = logging.getLogger(__name__)
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +142,65 @@ _PROV_OP = {"bfs": "algorithms.bfs", "sssp": "algorithms.sssp",
 _FUSE_DEPTH_DEFAULT: Dict[str, Optional[int]] = {
     "bfs": None, "sssp": None, "personalized_pagerank": 10,
 }
+
+# --- incremental maintenance (delta-aware serving) -------------------------
+# Ops whose cached result can provably survive an insert-only delta
+# (see _retention_safe), and ops the service can warm-start from the
+# parent version's cached result after a delta.
+_RETAINABLE = {"bfs", "sssp", "connected_components", "label_propagation"}
+_WARM_OPS = {"pagerank", "personalized_pagerank", "bfs", "sssp",
+             "connected_components", "label_propagation"}
+# provenance op names for results whose chain the service rewrites (fusion
+# scatter rows, warm-started recomputations): the recorded call is always
+# the equivalent standalone cold call
+_PROV_ANY = dict(_PROV_OP,
+                 pagerank="algorithms.pagerank",
+                 connected_components="algorithms.connected_components",
+                 label_propagation="algorithms.label_propagation")
+
+
+def _retention_safe(op: str, g: Graph, info: Any, parent_val: Any,
+                    params: Dict[str, Any]) -> bool:
+    """True when ``parent_val`` provably equals the child-version result.
+
+    ``info`` is the child's ``Graph._delta`` (insert-only, same node
+    numbering as the parent by construction of the fast apply path), so the
+    parent's cached array indexes the child's vertices directly.  Per-op
+    predicates over the inserted dense edges ``(u, v)``:
+
+    * ``bfs`` / unweighted ``sssp`` — ``D[u] + 1 >= D[v]`` (unreachable as
+      +inf): the new edge cannot shorten any path.  Sound even for a capped
+      ``n_iter``: round-``t`` values are exact <=t-hop distances, and an
+      edge satisfying the predicate creates no shorter path of any length.
+      Weighted ``sssp`` never retains (the cached weights keying cannot be
+      re-verified against the patched edge order).
+    * ``connected_components`` — ``label[u] == label[v]``: an
+      intra-component edge changes no component.  Sound because cc always
+      runs to fixpoint (no round cap in its API).
+    * ``label_propagation`` — same equality test, but only when
+      ``n_iter >= |V|`` (a capped run is not a fixpoint: equal labels at
+      radius ``t`` do not pin the labels interior vertices see through the
+      new shortcut).
+
+    Everything else (pagerank, hits, triangles, ...) is never retained —
+    any new edge perturbs the value.
+    """
+    u, v = info.add_src, info.add_dst
+    if u.size == 0:
+        return True
+    val = np.asarray(parent_val)
+    if op in ("bfs", "sssp"):
+        if op == "sssp" and params.get("weights") is not None:
+            return False
+        D = val.astype(np.float64)
+        if op == "bfs":
+            D = np.where(D < 0, np.inf, D)
+        return bool(np.all(D[..., u] + 1.0 >= D[..., v]))
+    if op == "label_propagation":
+        n_iter = params.get("n_iter", 20)
+        if not isinstance(n_iter, (int, np.integer)) or n_iter < g.n_nodes:
+            return False
+    return bool(np.all(val[u] == val[v]))
 
 
 def _sssp_weights_block_fusion(canon: Tuple[Tuple[str, Any], ...]) -> bool:
@@ -234,6 +304,19 @@ class Workspace:
                 v = prov.version_of(new)
                 self._versions[name] = v
                 return v
+
+    def apply_delta(self, name: str, delta: EdgeDelta) -> str:
+        """Publish ``name``'s graph with ``delta`` applied; returns the new
+        version token.
+
+        A convenience over :meth:`update` that keeps the delta on the
+        functional-update path: the child graph carries its ``_delta``
+        lineage, so downstream plan builds patch instead of rebuilding and
+        the service's delta-aware cache retention / warm starts engage.
+        Like any ``update``, a lost CAS race re-applies the delta against
+        the fresh object — deltas from concurrent writers all land.
+        """
+        return self.update(name, lambda g: g.apply_delta(delta))
 
     def names(self) -> List[str]:
         with self._lock:
@@ -418,21 +501,29 @@ class GraphService:
     """
 
     def __init__(self, workspace: Optional[Workspace] = None, *,
-                 fuse: bool = True, cache: bool = True,
+                 fuse: bool = True, cache: bool = True, incremental: bool = True,
                  max_cache_entries: int = 1024,
                  policy: Optional[SchedulerPolicy] = None,
                  workers: int = 0):
         self.workspace = workspace if workspace is not None else Workspace()
         self.fuse = fuse
         self.cache_enabled = cache
+        # delta-aware serving: retain provably-unaffected cache entries
+        # across Workspace.apply_delta and warm-start recomputation from the
+        # parent version's cached result (``incremental=False`` restores
+        # cold-only behavior, e.g. for differential testing)
+        self.incremental = incremental
         self._cache: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._max_cache = max_cache_entries
         self._lock = threading.RLock()
         self._sessions: Dict[str, Session] = {}
+        # per-session result-cache accounting, exposed via session_stats
+        self._session_counters: Dict[str, Dict[str, int]] = {}
         self.stats = {"requests": 0, "cache_hits": 0, "cache_misses": 0,
                       "fused_calls": 0, "fused_requests": 0,
                       "engine_calls": 0, "rejected": 0, "expired": 0,
-                      "batch_windows": 0}
+                      "batch_windows": 0, "retained": 0, "warm_starts": 0,
+                      "incremental_fallbacks": 0}
         self.policy = policy if policy is not None else SchedulerPolicy()
         self.scheduler = Scheduler(self, self.policy)
         self._stop = threading.Event()
@@ -467,9 +558,19 @@ class GraphService:
             return self._sessions[name]
 
     def session_stats(self, name: str) -> Dict[str, Any]:
-        """Scheduler-side accounting for one session (queue, deficit,
-        engine-ms consumed, completions, rejections, expiries)."""
-        return self.scheduler.session_stats(name)
+        """Accounting for one session: the scheduler snapshot (queue,
+        deficit, engine-ms consumed, completions, rejections, expiries)
+        merged with the service's result-cache counters — ``cache_hits``,
+        ``cache_misses`` and ``retained`` (hits served by a cache entry
+        re-bound across a delta).  Flat scalars, so the wire codec ships
+        the dict unchanged."""
+        out = self.scheduler.session_stats(name)
+        with self._lock:
+            c = self._session_counters.get(name)
+            out.update(c if c is not None
+                       else {"cache_hits": 0, "cache_misses": 0,
+                             "retained": 0})
+        return out
 
     def end_session(self, name: str) -> None:
         """Drop a session's namespace and (if idle) its scheduler state.
@@ -481,6 +582,7 @@ class GraphService:
         """
         with self._lock:
             self._sessions.pop(name, None)
+            self._session_counters.pop(name, None)
         self.scheduler.forget_session(name)
 
     # -- submission ---------------------------------------------------------
@@ -506,7 +608,11 @@ class GraphService:
             # control or charge, and the serving path (local or wire) sees
             # memory-speed latency.  The speculative probe must not count a
             # miss: the authoritative lookup happens again at dispatch.
-            hit, found = self._cache_get(q.cache_key, count_miss=False)
+            # Delta retention runs first so a provably-unaffected query
+            # against a freshly-updated graph also resolves at submit.
+            self._try_retain(q)
+            hit, found = self._cache_get(q.cache_key, count_miss=False,
+                                         session=p.session.name)
             if found:
                 self._finish(p, hit, cached=True)
                 return p
@@ -538,16 +644,29 @@ class GraphService:
         # order-insensitive: {"a":1,"b":2} and {"b":2,"a":1} are one key
         return (op, versions, tuple(sorted(canon, key=lambda kv: kv[0])))
 
-    def _cache_get(self, key: Optional[Tuple], count_miss: bool = True):
+    def _sess_counter(self, session: str) -> Dict[str, int]:
+        """Per-session cache counters; caller holds ``self._lock``."""
+        c = self._session_counters.get(session)
+        if c is None:
+            c = self._session_counters[session] = {
+                "cache_hits": 0, "cache_misses": 0, "retained": 0}
+        return c
+
+    def _cache_get(self, key: Optional[Tuple], count_miss: bool = True,
+                   session: Optional[str] = None):
         if key is None:
             return None, False
         with self._lock:
             if key in self._cache:
                 self._cache.move_to_end(key)
                 self.stats["cache_hits"] += 1
+                if session is not None:
+                    self._sess_counter(session)["cache_hits"] += 1
                 return self._cache[key], True
             if count_miss:
                 self.stats["cache_misses"] += 1
+                if session is not None:
+                    self._sess_counter(session)["cache_misses"] += 1
             return None, False
 
     def _cache_put(self, key: Optional[Tuple], value: Any) -> None:
@@ -607,7 +726,8 @@ class GraphService:
 
     # -- scheduler callbacks ------------------------------------------------
     def _cache_lookup(self, q: QueuedRequest) -> Tuple[Any, bool]:
-        return self._cache_get(q.cache_key)
+        self._try_retain(q)
+        return self._cache_get(q.cache_key, session=q.session)
 
     def _finish_cached(self, q: QueuedRequest, value: Any) -> None:
         self._finish(q.pending, value, cached=True)
@@ -618,6 +738,140 @@ class GraphService:
         queued = q.pending.queued_ms
         return {"queued_ms": 0.0 if queued is None else round(queued, 3),
                 "batch": batch, "sched_mode": self.policy.mode}
+
+    # -- incremental maintenance (delta-aware serving) ----------------------
+    def _delta_of(self, q: QueuedRequest):
+        """(graph, delta-info) when the request's sole input is a graph
+        produced by the insert-only ``apply_delta`` fast path, else None."""
+        inputs = q.payload["inputs"]
+        if len(inputs) != 1 or not isinstance(inputs[0][1], Graph):
+            return None
+        g = inputs[0][1]
+        info = g._delta
+        if info is None:
+            return None
+        return g, info
+
+    def _parent_key(self, q: QueuedRequest, parent: Graph
+                    ) -> Optional[Tuple]:
+        """``q.cache_key`` re-pointed at the parent graph's version."""
+        if q.cache_key is None:
+            return None
+        op, versions, canon = q.cache_key
+        if len(versions) != 1:
+            return None
+        (name, _), = versions
+        return (op, ((name, prov.version_of(parent)),), canon)
+
+    def _parent_cached(self, q: QueuedRequest, parent: Graph):
+        """Parent-version cache entry without touching hit/miss counters."""
+        pkey = self._parent_key(q, parent)
+        if pkey is None:
+            return None, False
+        with self._lock:
+            if pkey in self._cache:
+                return self._cache[pkey], True
+        return None, False
+
+    def _try_retain(self, q: QueuedRequest) -> bool:
+        """Re-bind the parent version's cached result to ``q``'s key when
+        the delta provably cannot change it (see :func:`_retention_safe`).
+
+        The retained entry then serves this and every future identical
+        query against the child version as an ordinary cache hit — the
+        query never reaches the engine even though the graph changed.
+        """
+        if not self.incremental or q.op not in _RETAINABLE \
+                or q.cache_key is None:
+            return False
+        with self._lock:
+            if q.cache_key in self._cache:
+                return False          # already resident; nothing to retain
+        gi = self._delta_of(q)
+        if gi is None:
+            return False
+        g, info = gi
+        if not info.insert_only:
+            return False              # deletions can affect any result
+        parent_val, found = self._parent_cached(q, info.parent)
+        if not found:
+            return False
+        try:
+            if not _retention_safe(q.op, g, info, parent_val,
+                                   q.payload["params"]):
+                return False
+        except Exception:
+            _log.exception("retention predicate failed for %s; running cold",
+                           q.op)
+            return False
+        self._cache_put(q.cache_key, parent_val)
+        with self._lock:
+            self.stats["retained"] += 1
+            self._sess_counter(q.session)["retained"] += 1
+        return True
+
+    def _try_warm(self, q: QueuedRequest) -> Optional[Any]:
+        """Warm-start ``q`` from the parent version's cached result.
+
+        Returns the (blocked) result, or None to run cold.  Soundness
+        gates mirror the incremental helpers in :mod:`repro.core.algorithms`:
+        traversals/labels need an insert-only delta, an uncapped run and the
+        exact parent result; pagerank/PPR warm from any delta but only
+        under ``tol`` semantics (a warm fixed-``n_iter`` run would be a
+        *different* iterate than the cold one, so it never substitutes).
+        The result's provenance is rewritten to the equivalent cold call —
+        export/replay are oblivious to the warm start, exactly as they are
+        to fusion.
+        """
+        if not self.incremental or q.op not in _WARM_OPS:
+            return None
+        gi = self._delta_of(q)
+        if gi is None:
+            return None
+        g, info = gi
+        op = q.op
+        params = dict(q.payload["params"])
+        parent_val, found = self._parent_cached(q, info.parent)
+        out = None
+        try:
+            if not found:
+                pass                  # no parent result to warm from
+            elif op == "pagerank":
+                if params.get("tol") is not None and "init" not in params:
+                    out = A.pagerank(g, init=parent_val, **params)
+            elif op == "personalized_pagerank":
+                source = params.pop("source", None)
+                if (params.get("tol") is not None and "init" not in params
+                        and isinstance(source, (int, np.integer))
+                        and not isinstance(source, bool)):
+                    out = A.personalized_pagerank(g, int(source),
+                                                  init=parent_val, **params)
+            elif op in ("bfs", "sssp"):
+                source = params.pop("source", None)
+                extra = set(params) - {"n_iter", "weights"}
+                if (not extra and params.get("n_iter") is None
+                        and params.get("weights") is None
+                        and isinstance(source, (int, np.integer))
+                        and not isinstance(source, bool)):
+                    warm = A.incremental_bfs if op == "bfs" \
+                        else A.incremental_sssp
+                    out = warm(g, int(source), parent_val)
+            elif op == "connected_components":
+                if not set(params):
+                    out = A.incremental_connected_components(g, parent_val)
+            else:                     # label_propagation
+                if not set(params) - {"n_iter"}:
+                    out = A.incremental_label_propagation(
+                        g, parent_val, n_iter=params.get("n_iter", 20))
+        except Exception:
+            _log.exception("warm start failed for %s; running cold", op)
+            out = None
+        with self._lock:
+            if out is None:
+                self.stats["incremental_fallbacks"] += 1
+            else:
+                self.stats["warm_starts"] += 1
+        return None if out is None else _block(out)
 
     def _run_group(self, group: List[QueuedRequest]) -> float:
         """Execute one engine call for ``group``; returns measured engine ms.
@@ -640,10 +894,20 @@ class GraphService:
                 self.stats["fused_requests"] += len(group)
         if q0.fuse_key is None:
             t0 = time.perf_counter()
-            out = _block(fn(**dict(q0.payload["inputs"]),
-                            **q0.payload["params"]))
-            dt = (time.perf_counter() - t0) * 1e3
-            prov.annotate_last(out, self._sched_meta(q0, 1))
+            out = self._try_warm(q0)
+            if out is None:
+                out = _block(fn(**dict(q0.payload["inputs"]),
+                                **q0.payload["params"]))
+                dt = (time.perf_counter() - t0) * 1e3
+                prov.annotate_last(out, self._sched_meta(q0, 1))
+            else:
+                # warm-started: the recorded provenance is the equivalent
+                # cold call (the warm init would be an opaque array), with
+                # the warm start visible only as metadata
+                dt = (time.perf_counter() - t0) * 1e3
+                meta = dict(self._sched_meta(q0, 1), incremental=True)
+                prov.record_call(_PROV_ANY[op], q0.payload["inputs"],
+                                 q0.payload["params"], out, meta=meta)
             self._cache_put(q0.cache_key, out)
             self._finish(q0.pending, out)
             return dt
@@ -659,9 +923,17 @@ class GraphService:
             if n_iters[0] is not None:
                 kw["n_iter"] = n_iters[0]
             t0 = time.perf_counter()
-            out = _block(fn(g, sources[0], **kw))
-            dt = (time.perf_counter() - t0) * 1e3
-            prov.annotate_last(out, self._sched_meta(q0, 1))
+            out = self._try_warm(q0)
+            if out is None:
+                out = _block(fn(g, sources[0], **kw))
+                dt = (time.perf_counter() - t0) * 1e3
+                prov.annotate_last(out, self._sched_meta(q0, 1))
+            else:
+                dt = (time.perf_counter() - t0) * 1e3
+                meta = dict(self._sched_meta(q0, 1), incremental=True)
+                prov.record_call(_PROV_ANY[op], [("g", g)],
+                                 {**kw, src_param: sources[0]}, out,
+                                 meta=meta)
             self._cache_put(q0.cache_key, out)
             self._finish(q0.pending, out)
             return dt

@@ -46,7 +46,7 @@ import threading
 from typing import Any, Dict, Optional, Tuple
 
 from . import wire
-from .graph_service import GraphService, Session
+from .graph_service import EdgeDelta, GraphService, Session
 from .policy import SchedulerPolicy, error_to_wire
 
 __all__ = ["GraphServer", "spawn_server", "main"]
@@ -180,6 +180,18 @@ class _Connection:
     def _op_ws_version(self, req_id: int, msg: dict) -> dict:
         return {"version": self.server.service.workspace.version(
             msg["name"])}
+
+    def _op_ws_apply_delta(self, req_id: int, msg: dict) -> dict:
+        # the only functional update that CAN cross the wire: the delta is
+        # plain data, and the server applies it on the CAS update path so
+        # the child graph keeps its lineage (plan patching, cache retention
+        # and warm starts all engage exactly as for an in-process update)
+        delta = EdgeDelta(add_src=msg.get("add_src", ()),
+                          add_dst=msg.get("add_dst", ()),
+                          del_src=msg.get("del_src", ()),
+                          del_dst=msg.get("del_dst", ()))
+        return {"version": self.server.service.workspace.apply_delta(
+            msg["name"], delta)}
 
     def _op_sess_put(self, req_id: int, msg: dict) -> dict:
         obj = wire.unpack_object(msg["obj"])

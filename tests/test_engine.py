@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import algorithms as A
 from repro.core import engine
-from repro.core.graph import Graph
+from repro.core.graph import EdgeDelta, Graph
 from repro.data.rmat import rmat_edges
 
 BACKENDS = ["xla", "pallas", "bsr", "frontier"]
@@ -194,6 +194,88 @@ def test_functional_updates_invalidate_plan():
     assert g3.n_edges == 2
     g.invalidate_plan()
     assert g.plan() is not p
+
+
+# ---------------------------------------------------------------------------
+# plan-cache semantics under deltas
+# ---------------------------------------------------------------------------
+
+
+def _known_id_delta(g, k=6, seed=0):
+    r = np.random.default_rng(seed)
+    ids = np.asarray(g.node_ids)[:g.n_nodes]
+    return EdgeDelta.inserts(ids[r.integers(0, g.n_nodes, k)],
+                             ids[r.integers(0, g.n_nodes, k)])
+
+
+def test_delta_child_plan_patched_without_resorting(monkeypatch):
+    """The child's plan derives from the parent's: memoized per child,
+    linked to the parent plan, and built with zero edge re-derivation."""
+    g = rmat_graph(seed=83)
+    p = g.plan()
+    child = g.apply_delta(_known_id_delta(g))
+    assert child._delta is not None
+
+    def boom(*a, **kw):
+        raise AssertionError("patched plan re-derived edge arrays")
+
+    monkeypatch.setattr(Graph, "in_edges", boom)
+    monkeypatch.setattr(Graph, "out_edges", boom)
+    cp = child.plan()
+    assert child.plan() is cp                     # memoized per child
+    assert cp._parent is p                        # lineage points at parent
+    assert cp.dirty_vertices is not None and len(cp.dirty_vertices) > 0
+
+
+def test_delta_leaves_parent_plan_untouched():
+    g = rmat_graph(seed=89)
+    p = g.plan()
+    in_src0 = np.asarray(p.in_src).copy()
+    child = g.apply_delta(_known_id_delta(g))
+    child.plan()
+    assert g.plan() is p                          # identity preserved
+    assert g.n_edges == p.n_edges                 # parent graph unchanged
+    np.testing.assert_array_equal(np.asarray(p.in_src), in_src0)
+
+
+def test_patched_plan_matches_rederived():
+    """Patched CSR arrays and degrees are bit-identical to a plan derived
+    from scratch over the same edge set (insert-only and mixed)."""
+    g = rmat_graph(seed=97)
+    ids = np.asarray(g.node_ids)[:g.n_nodes]
+    es, ed = (np.asarray(x) for x in g.out_edges())
+    ins = _known_id_delta(g, seed=1)
+    mixed = EdgeDelta(ins.add_src, ins.add_dst,
+                      ids[es[:3]], ids[ed[:3]])
+    for delta in (ins, mixed):
+        child = g.apply_delta(delta)
+        assert child._delta is not None
+        cp = child.plan()
+        ref = Graph.from_dense_edges(*child.out_edges(), child.n_nodes).plan()
+        assert cp.n_edges == ref.n_edges
+        for fld in ("in_src", "in_dst", "out_src", "out_dst",
+                    "out_deg", "in_deg", "dangling"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(cp, fld))[:cp.n_edges],
+                np.asarray(getattr(ref, fld))[:cp.n_edges],
+                err_msg=f"{fld} (insert_only={delta.insert_only})")
+
+
+def test_second_update_gets_its_own_plan():
+    """A second delta on the child yields a fresh plan chained to the
+    child's — earlier plans stay valid and unmodified."""
+    g = rmat_graph(seed=101)
+    c1 = g.apply_delta(_known_id_delta(g, seed=2))
+    p1 = c1.plan()
+    c2 = c1.apply_delta(_known_id_delta(g, seed=3))
+    p2 = c2.plan()
+    assert p2 is not p1 and c1.plan() is p1
+    assert p2._parent is p1
+    # results through the chained patch match a from-scratch derivation
+    fresh = Graph.from_dense_edges(*c2.out_edges(), c2.n_nodes)
+    np.testing.assert_array_equal(
+        np.asarray(A.connected_components(c2)),
+        np.asarray(A.connected_components(fresh)))
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ except ModuleNotFoundError:  # pragma: no cover - depends on environment
 
 from repro.core import algorithms as A
 from repro.core import engine
-from repro.core.graph import Graph
+from repro.core.graph import EdgeDelta, Graph
 from repro.data.rmat import rmat_edges
 
 BACKENDS = list(engine.BACKENDS)          # xla, pallas, bsr, frontier
@@ -350,3 +350,117 @@ def test_frontier_zero_edge_returns_init_unchanged():
     np.testing.assert_array_equal(dist, want)
     assert np.asarray(A.bfs(g, 2, backend="frontier")).tolist() \
         == [-1, -1, 0, -1, -1]
+
+
+# ---------------------------------------------------------------------------
+# incremental oracle: after a delta, warm-started results == from-scratch
+# ---------------------------------------------------------------------------
+
+
+def _delta_for(g, seed, mixed):
+    """Random delta over the graph's existing node-id space.
+
+    Inserts stay within known ids so the ``apply_delta`` fast path engages
+    and the child keeps delta lineage; ``mixed`` additionally deletes a
+    random subset of existing edges (original-id pairs).
+    """
+    r = np.random.default_rng(seed)
+    ids = np.asarray(g.node_ids)[:g.n_nodes]
+    k = max(2, g.n_nodes // 6)
+    a_s = ids[r.integers(0, g.n_nodes, k)].astype(np.int32)
+    a_d = ids[r.integers(0, g.n_nodes, k)].astype(np.int32)
+    if not mixed or g.n_edges == 0:
+        return EdgeDelta.inserts(a_s, a_d)
+    es, ed = (np.asarray(x) for x in g.out_edges())
+    pick = r.integers(0, g.n_edges, max(1, g.n_edges // 8))
+    return EdgeDelta(a_s, a_d, ids[es[pick]].astype(np.int32),
+                     ids[ed[pick]].astype(np.int32))
+
+
+@pytest.mark.parametrize("name", [name for name, _ in CORPUS])
+@pytest.mark.parametrize("mixed", [False, True])
+def test_incremental_matches_from_scratch(name, mixed):
+    """Every supported op: incremental == cold-on-child == lineage-free
+    rebuild, for random insert-only and mixed deltas on every corpus graph.
+
+    Monotone min-relaxations must match bit-for-bit; pagerank under ``tol``
+    semantics gets a tolerance.  Mixed deltas must make the traversal/label
+    helpers decline (deletions are unsound to warm) and still leave the
+    cold path exact.
+    """
+    g = GRAPHS[name]
+    if g.n_nodes == 0:
+        pytest.skip("needs a source vertex")
+    delta = _delta_for(g, seed=sum(map(ord, name)), mixed=mixed)
+    n_lp = max(g.n_nodes, 1)
+    parent = {
+        "bfs": A.bfs(g, 0),
+        "sssp": A.sssp(g, 0),
+        "cc": A.connected_components(g),
+        "lp": A.label_propagation(g, n_iter=n_lp),
+        "pr": A.pagerank(g, tol=1e-6),
+    }
+    child = g.apply_delta(delta)
+    assert child._delta is not None          # fast path engaged
+    assert child._delta.insert_only == delta.insert_only
+    # lineage-free rebuild of the same edge set in the same dense numbering
+    cs, cd = child.out_edges()
+    fresh = Graph.from_dense_edges(cs, cd, child.n_nodes)
+
+    incs = {
+        "bfs": A.incremental_bfs(child, 0, parent["bfs"]),
+        "sssp": A.incremental_sssp(child, 0, parent["sssp"]),
+        "cc": A.incremental_connected_components(child, parent["cc"]),
+        "lp": A.incremental_label_propagation(child, parent["lp"],
+                                              n_iter=n_lp),
+    }
+    colds = {
+        "bfs": A.bfs(child, 0),
+        "sssp": A.sssp(child, 0),
+        "cc": A.connected_components(child),
+        "lp": A.label_propagation(child, n_iter=n_lp),
+    }
+    scratch = {
+        "bfs": A.bfs(fresh, 0),
+        "sssp": A.sssp(fresh, 0),
+        "cc": A.connected_components(fresh),
+        "lp": A.label_propagation(fresh, n_iter=n_lp),
+    }
+    for op in colds:
+        np.testing.assert_array_equal(
+            np.asarray(colds[op]), np.asarray(scratch[op]),
+            err_msg=f"{op}: patched-plan cold run != lineage-free rebuild")
+        if delta.insert_only:
+            if op in ("bfs", "sssp"):
+                assert incs[op] is not None, f"{op} declined an " \
+                    "insert-only delta"
+            if incs[op] is not None:
+                np.testing.assert_array_equal(
+                    np.asarray(incs[op]), np.asarray(colds[op]),
+                    err_msg=f"{op}: incremental != from-scratch")
+        else:
+            assert incs[op] is None, f"{op} warmed through deletions"
+
+    warm_pr = A.pagerank(child, tol=1e-6, init=parent["pr"])
+    cold_pr = A.pagerank(child, tol=1e-6)
+    scratch_pr = A.pagerank(fresh, tol=1e-6)
+    np.testing.assert_allclose(np.asarray(warm_pr), np.asarray(cold_pr),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cold_pr), np.asarray(scratch_pr),
+                               atol=1e-4)
+
+
+def test_incremental_cc_engages_on_plain_graph():
+    # the und-view patch carries lineage whenever all insert endpoints are
+    # non-isolated in the parent — assert the warm path actually fires
+    # somewhere, so the matrix above can't silently pass on all-fallbacks
+    g = GRAPHS["rmat"]
+    es, ed = (np.asarray(x) for x in g.out_edges())
+    ids = np.asarray(g.node_ids)[:g.n_nodes]
+    delta = EdgeDelta.inserts(ids[es[:4]], ids[ed[2:6]])
+    child = g.apply_delta(delta)
+    inc = A.incremental_connected_components(
+        child, A.connected_components(g))
+    assert inc is not None
+    np.testing.assert_array_equal(np.asarray(inc),
+                                  np.asarray(A.connected_components(child)))

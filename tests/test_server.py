@@ -17,8 +17,9 @@ import time
 import numpy as np
 import pytest
 
+from repro.core import algorithms as A
 from repro.core import provenance as P
-from repro.core.graph import Graph
+from repro.core.graph import EdgeDelta, Graph
 from repro.core.table import INT, STR, Table
 from repro.data.rmat import rmat_edges
 from repro.serve.client import RemoteService
@@ -348,6 +349,52 @@ def test_two_client_publish_race_stays_consistent(served):
                 P.version_of(ws.get(f"t{100 + i}"))
     finally:
         client2.close()
+
+
+# ---------------------------------------------------------------------------
+# incremental maintenance over the wire
+# ---------------------------------------------------------------------------
+
+
+def test_apply_delta_over_wire_retention_and_counters(served):
+    """ws_apply_delta patches the server-side graph in place of a rebuild;
+    a provably-unaffected cached query survives the version bump, an
+    affected one warm-starts, and session_stats reports the cache counters
+    over the wire."""
+    server, client = served
+    client.workspace.put("pg", Graph.from_edges([0, 1, 2], [1, 2, 3]))
+    sess = client.session("w")
+    req = {"op": "bfs", "graph": "pg", "params": {"source": 0}}
+    r1 = sess.execute(req)
+
+    v = client.workspace.apply_delta("pg", EdgeDelta.inserts([2], [1]))
+    assert client.workspace.version("pg") == v     # bump visible client-side
+    assert server.service.workspace.get("pg")._delta is not None  # patched
+    r2 = sess.execute(dict(req))                   # back edge: retained
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(r1))
+    st = client.session_stats("w")
+    assert st["retained"] >= 1
+    assert st["cache_hits"] >= 1 and st["cache_misses"] >= 1
+
+    client.workspace.apply_delta("pg", EdgeDelta.inserts([0], [3]))
+    r3 = sess.execute(dict(req))                   # shortcut: warm recompute
+    assert np.asarray(r3)[3] == 1
+    assert server.service.stats["warm_starts"] >= 1
+    local = Graph.from_edges([0, 1, 2, 2, 0], [1, 2, 3, 1, 3])
+    np.testing.assert_array_equal(np.asarray(r3), np.asarray(A.bfs(local, 0)))
+
+
+def test_apply_delta_refreshes_client_mirror(served):
+    """put() keeps a local mirror; apply_delta tracks it through deltas so
+    export_script root embedding stays valid after remote updates."""
+    _, client = served
+    g = Graph.from_edges([0, 1], [1, 2])
+    client.workspace.put("mg", g)
+    v = client.workspace.apply_delta("mg", EdgeDelta.inserts([2], [0]))
+    mirror = client.workspace._mirror["mg"]
+    assert mirror is not g and mirror.n_edges == 3
+    assert P.peek_version(mirror) == v == client.workspace.version("mg")
+
 
 
 def test_disconnect_cleans_up_sessions(served):

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import algorithms as A
 from repro.core import provenance as P
-from repro.core.graph import Graph
+from repro.core.graph import EdgeDelta, Graph
 from repro.core.table import INT, STR, Table
 from repro.data.rmat import rmat_edges
 from repro.serve.graph_service import (DeadlineExpired, GraphService,
@@ -304,6 +304,114 @@ def test_cache_disabled_always_recomputes():
     svc.session("a").execute(dict(req))
     assert svc.stats["cache_hits"] == 0
     assert svc.stats["engine_calls"] == 2
+
+
+# ---------------------------------------------------------------------------
+# delta-aware cache retention + warm-start recomputation
+# ---------------------------------------------------------------------------
+
+
+def _path_service():
+    """0 -> 1 -> 2 -> 3: small enough to reason about retention by hand."""
+    svc = GraphService()
+    svc.workspace.put("p", Graph.from_edges([0, 1, 2], [1, 2, 3]))
+    return svc
+
+
+def test_retention_rebinds_unaffected_entries_across_delta():
+    """A cached BFS stays served from cache after an insert that provably
+    cannot shorten any distance (back edge 2->1: D[2]+1 >= D[1])."""
+    svc = _path_service()
+    s = svc.session("a")
+    req = {"op": "bfs", "graph": "p", "params": {"source": 0}}
+    r1 = s.execute(req)
+    calls = svc.stats["engine_calls"]
+    svc.workspace.apply_delta("p", EdgeDelta.inserts([2], [1]))
+    r2 = s.execute(dict(req))
+    assert svc.stats["engine_calls"] == calls      # no recompute at all
+    assert svc.stats["retained"] >= 1
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(r1))
+    np.testing.assert_array_equal(                 # and it is still correct
+        np.asarray(r2), np.asarray(A.bfs(svc.workspace.get("p"), 0)))
+
+
+def test_affected_query_warm_starts_and_stays_exact():
+    """An insert that shortens a path (0->3) defeats retention; the engine
+    warm-starts from the parent levels and matches the cold answer."""
+    svc = _path_service()
+    s = svc.session("a")
+    req = {"op": "bfs", "graph": "p", "params": {"source": 0}}
+    s.execute(req)
+    svc.workspace.apply_delta("p", EdgeDelta.inserts([0], [3]))
+    r2 = s.execute(dict(req))
+    assert np.asarray(r2)[3] == 1                  # shortcut is visible
+    assert svc.stats["retained"] == 0
+    assert svc.stats["warm_starts"] >= 1
+    np.testing.assert_array_equal(
+        np.asarray(r2), np.asarray(A.bfs(svc.workspace.get("p"), 0)))
+    # warm-started results carry cold-equivalent provenance, flagged
+    rec = P.records_of(r2)[-1]
+    assert rec.op == "algorithms.bfs"
+    assert dict(rec.meta).get("incremental") is True
+
+
+def test_deletions_fall_back_to_cold_recompute():
+    svc = _path_service()
+    s = svc.session("a")
+    req = {"op": "bfs", "graph": "p", "params": {"source": 0}}
+    s.execute(req)
+    svc.workspace.apply_delta(
+        "p", EdgeDelta(add_src=[2], add_dst=[0], del_src=[0], del_dst=[1]))
+    r2 = s.execute(dict(req))
+    assert svc.stats["retained"] == 0              # deletion: never retained
+    assert svc.stats["incremental_fallbacks"] >= 1
+    np.testing.assert_array_equal(
+        np.asarray(r2), np.asarray(A.bfs(svc.workspace.get("p"), 0)))
+
+
+def test_warm_pagerank_under_tol_matches_cold():
+    svc = make_service()
+    s = svc.session("a")
+    req = {"op": "pagerank", "graph": "g", "params": {"tol": 1e-6}}
+    s.execute(req)
+    ids = np.asarray(svc.workspace.get("g").node_ids)[:8]
+    svc.workspace.apply_delta("g", EdgeDelta.inserts(ids[:4], ids[4:8]))
+    r2 = s.execute(dict(req))
+    assert svc.stats["warm_starts"] >= 1
+    np.testing.assert_allclose(
+        np.asarray(r2),
+        np.asarray(A.pagerank(svc.workspace.get("g"), tol=1e-6)), atol=1e-5)
+
+
+def test_incremental_disabled_never_retains_or_warms():
+    svc = GraphService(incremental=False)
+    svc.workspace.put("p", Graph.from_edges([0, 1, 2], [1, 2, 3]))
+    s = svc.session("a")
+    req = {"op": "bfs", "graph": "p", "params": {"source": 0}}
+    s.execute(req)
+    calls = svc.stats["engine_calls"]
+    svc.workspace.apply_delta("p", EdgeDelta.inserts([2], [1]))
+    s.execute(dict(req))
+    assert svc.stats["retained"] == 0
+    assert svc.stats["warm_starts"] == 0
+    assert svc.stats["engine_calls"] == calls + 1  # plain cold recompute
+
+
+def test_session_stats_carry_cache_counters():
+    svc = _path_service()
+    a, b = svc.session("a"), svc.session("b")
+    req = {"op": "connected_components", "graph": "p", "params": {}}
+    a.execute(req)
+    a.execute(dict(req))
+    b.execute(dict(req))                           # b: pure cache hit
+    st = svc.session_stats("a")
+    assert st["cache_misses"] >= 1 and st["cache_hits"] >= 1
+    assert st["retained"] == 0
+    assert "completed" in st                       # scheduler fields coexist
+    svc.workspace.apply_delta("p", EdgeDelta.inserts([2], [1]))
+    a.execute(dict(req))                           # labels equal: retained
+    assert svc.session_stats("a")["retained"] == 1
+    assert svc.session_stats("b")["retained"] == 0  # counters are per-session
 
 
 # ---------------------------------------------------------------------------
