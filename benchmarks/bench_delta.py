@@ -24,6 +24,13 @@ gated**; absolute numbers are printed for information but never fail:
 Metrics that appear or disappear (new benchmark blocks, renamed backends)
 are informational, never failures.
 
+One exception to "ratios only": ``service.obs_overhead.ratio`` (enabled /
+disabled wall time of the fused service workload) carries an **absolute
+cap** of 1.05x.  It is already a same-run, same-machine ratio, so the cap
+is hardware-independent — and the observability contract ("under 5%
+overhead") is absolute, not relative to whatever the baseline happened to
+measure.  The cap fails the check even when no baseline file exists.
+
 Usage::
 
     python benchmarks/bench_delta.py --old-dir /tmp/baseline --new-dir . \
@@ -36,6 +43,11 @@ import os
 import sys
 
 _FILES = ("BENCH_engine.json", "BENCH_service.json")
+
+#: absolute caps enforced on the *new* values regardless of any baseline:
+#: metric -> max allowed value.  Used for contracts that are absolute by
+#: nature (the observability subsystem promises <= 5% overhead).
+_ABS_MAX = {"service.obs_overhead.ratio": 1.05}
 
 
 def _metrics(fname: str, data: dict) -> dict:
@@ -79,6 +91,12 @@ def _metrics(fname: str, data: dict) -> dict:
         if "p99_improvement" in overload:
             out["service.overload.p99_improvement"] = (
                 float(overload["p99_improvement"]), "higher", True)
+        obs_blk = data.get("obs_overhead") or {}
+        if "ratio" in obs_blk:
+            # delta-gating is pointless here (1.00 vs 1.02 is noise); the
+            # _ABS_MAX cap holds the real contract
+            out["service.obs_overhead.ratio"] = (
+                float(obs_blk["ratio"]), "lower", False)
         remote = data.get("remote") or {}
         if "overhead_cached_p50" in remote:
             # info-only: the 1 ms baseline floor usually dominates the
@@ -115,6 +133,13 @@ def main() -> int:
         old = _metrics(fname, _load(os.path.join(args.old_dir, fname)))
         new = _metrics(fname, _load(os.path.join(args.new_dir, fname)))
         for key in sorted(set(old) | set(new)):
+            cap = _ABS_MAX.get(key)
+            if cap is not None and key in new and new[key][0] > cap:
+                failures.append(key)
+                rows.append((key, old[key][0] if key in old else None,
+                             new[key][0],
+                             f"EXCEEDS ABSOLUTE CAP {cap} (hard gate)"))
+                continue
             if key not in old:
                 rows.append((key, None, new[key][0], "new metric (info)"))
                 continue

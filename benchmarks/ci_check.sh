@@ -21,8 +21,11 @@ python -m pytest -x -q
 # serving smoke: spawn a real server subprocess on an ephemeral port, run a
 # scripted wire-protocol client workload, assert a clean drain-and-exit
 python benchmarks/serve_smoke.py
+# observability smoke: traced in-process workload, Chrome trace-event JSON
+# schema validated, metrics snapshot non-empty
+python benchmarks/obs_smoke.py
 if [[ "$FAST" == "1" ]]; then
-  echo "ci_check OK (--fast tier: tests + server smoke, benchmarks skipped)"
+  echo "ci_check OK (--fast tier: tests + server/obs smoke, benchmarks skipped)"
   exit 0
 fi
 
@@ -94,6 +97,12 @@ print(f"remote gate OK: cached-query wire overhead "
       f"{m['overhead_cached_p50']}x in-process "
       f"({m['multiproc']['clients']} client processes, "
       f"{m['multiproc']['agg_qps']} qps aggregate)")
+obs = r["obs_overhead"]
+assert obs["ratio"] <= 1.05, \
+    f"obs gate: instrumentation overhead {obs['ratio']}x > 1.05x " \
+    f"(enabled {obs['enabled_median_s']}s, " \
+    f"disabled {obs['disabled_median_s']}s)"
+print(f"obs gate OK: instrumentation overhead {obs['ratio']}x (<= 1.05x)")
 EOF
 # regression delta: fresh ratios vs the committed baseline (>30% fails;
 # absolute ms/qps are machine-relative and reported info-only)

@@ -1,0 +1,98 @@
+"""CI smoke for the observability subsystem: run a traced in-process
+workload through the full service stack, then validate the two export
+surfaces — the Chrome trace-event JSON schema and the metrics snapshot.
+
+This is the fast-tier guard for ``repro.obs``: if an instrumentation hook
+regresses (spans stop nesting, the exporter emits malformed events, a
+counter family disappears), this fails in seconds on a tiny graph long
+before the overhead bench or a human looking at chrome://tracing would.
+
+Run:  PYTHONPATH=src python benchmarks/obs_smoke.py
+"""
+
+import json
+import sys
+import tempfile
+import time
+
+
+def main() -> int:
+    t_start = time.perf_counter()
+    import numpy as np
+
+    from repro import obs
+    from repro.core import algorithms as A
+    from repro.core.graph import Graph
+    from repro.serve.graph_service import GraphService, Workspace
+
+    obs.reset()
+
+    rng = np.random.default_rng(7)
+    n, m = 512, 2048
+    g = Graph.from_edges(rng.integers(0, n, m).astype(np.int32),
+                         rng.integers(0, n, m).astype(np.int32))
+
+    # traced service workload: traversal burst + cached repeat + pagerank
+    ws = Workspace()
+    ws.put("g", g)
+    svc = GraphService(ws, workers=2)
+    try:
+        sess = svc.session("obs-smoke")
+        trace = obs.new_trace_id()
+        pend = [svc.submit(sess, {"op": "bfs", "graph": "g",
+                                  "params": {"source": s}}, trace=trace)
+                for s in range(4)]
+        svc.flush()
+        for p in pend:
+            p.result(timeout=120)
+        repeat = svc.submit(sess, {"op": "bfs", "graph": "g",
+                                   "params": {"source": 0}}, trace=trace)
+        repeat.result(timeout=120)
+        assert repeat.cached, "repeat query missed the result cache"
+        svc.execute(sess, {"op": "pagerank", "graph": "g",
+                           "params": {"n_iter": 5}})
+    finally:
+        svc.close()
+
+    # the frontier engine emits per-round spans with frontier sizes
+    with obs.span("smoke.frontier", trace=trace):
+        A.bfs(g, 0, backend="frontier")
+
+    # --- Chrome trace export: validate the trace-event schema -------------
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as f:
+        doc = obs.export_chrome_trace(f.name, trace=trace)
+        assert json.load(open(f.name)) == doc, "on-disk trace != export"
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs, "empty trace"
+    for e in evs:
+        assert e["ph"] in ("X", "i", "M"), e
+        assert isinstance(e["name"], str) and isinstance(e["pid"], int)
+        if e["ph"] in ("X", "i"):
+            assert isinstance(e["ts"], float) and isinstance(e["tid"], int)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+    names = {e["name"] for e in evs}
+    for want in ("service.submit", "sched.queued", "sched.execute",
+                 "engine.bfs", "service.cache_hit_submit",
+                 "engine.frontier_fixpoint", "engine.frontier.round"):
+        assert want in names, f"span {want!r} missing from trace: {names}"
+    rounds = [e for e in evs if e["name"] == "engine.frontier.round"]
+    assert all("frontier" in e["args"] for e in rounds)
+
+    # --- metrics snapshot: non-empty, and the core families are present ---
+    snap = obs.dump_metrics()
+    assert snap, "metrics snapshot is empty"
+    assert snap["service.requests"]["value"] >= 5
+    assert snap["service.cache_hits"]["value"] >= 1
+    assert snap["sched.engine_ms"]["count"] >= 1
+    assert snap["engine.frontier.rounds"]["value"] >= 1
+    assert "# TYPE repro_service_requests counter" in obs.dump_metrics("prom")
+
+    print(f"obs smoke OK ({time.perf_counter() - t_start:.1f}s: "
+          f"{len(evs)} trace events, {len(snap)} metric series)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

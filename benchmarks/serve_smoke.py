@@ -70,6 +70,19 @@ def main() -> int:
               f"{stats['cache_hits']} cache hits, "
               f"{stats['fused_requests']} fused")
 
+        # observability over the wire: the server's metrics snapshot agrees
+        # with the legacy stats counters, and the client can pull a Chrome
+        # trace filtered to its own requests
+        metrics = client.metrics()
+        assert metrics["service.requests"]["value"] == stats["requests"]
+        assert metrics["sched.engine_ms"]["count"] >= 1
+        assert "# TYPE repro_service_requests counter" in client.metrics_text()
+        doc = client.chrome_trace(trace=again.trace)
+        names = {e["name"] for e in doc["traceEvents"]}
+        assert "rpc.submit" in names and "service.submit" in names, names
+        print(f"smoke: obs snapshot {len(metrics)} series, "
+              f"{len(doc['traceEvents'])} trace events for cached repeat")
+
         client.shutdown_server()
         client.close()
     except BaseException:

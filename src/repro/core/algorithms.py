@@ -23,7 +23,6 @@ and returns per-node arrays (convertible back to tables via
 
 from __future__ import annotations
 
-import logging
 from typing import Optional, Tuple
 
 import jax
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine
+from .. import obs
 from .graph import Graph
 from .provenance import track
 
@@ -54,7 +54,7 @@ __all__ = [
     "incremental_label_propagation",
 ]
 
-_log = logging.getLogger(__name__)
+_log = obs.get_logger(__name__)
 
 _INF = jnp.float32(jnp.inf)
 
@@ -143,8 +143,10 @@ def pagerank(g: Graph, n_iter: int = 10, damping: float = 0.85, *,
            else jnp.full((g.n_nodes,), 1.0 / g.n_nodes, dtype=jnp.float32))
     args = (jnp.float32(damping), plan.inv_out_deg, plan.dangling)
     if tol is not None:
-        return engine.fixpoint(ex, _pagerank_body, pr0, tol=float(tol),
-                               max_iter=10_000, args=args)
+        return engine.fixpoint(
+            ex, _pagerank_body, pr0, tol=float(tol), max_iter=10_000,
+            args=args,
+            obs_tag="pagerank_warm" if init is not None else "pagerank")
     return engine.fixpoint(ex, _pagerank_body, pr0, n_iter=n_iter, args=args)
 
 
@@ -675,11 +677,13 @@ def label_propagation(g: Graph, n_iter: int = 20, *,
 def _insert_only_info(g: Graph, op: str):
     info = getattr(g, "_delta", None)
     if info is None:
-        _log.info("incremental %s: graph has no delta lineage -> cold run", op)
+        _log.info("incremental.cold_fallback", op=op,
+                  reason="no delta lineage")
         return None
     if not info.insert_only:
-        _log.info("incremental %s: delta deletes edges (parent result is "
-                  "no longer an upper bound) -> cold run", op)
+        _log.info("incremental.cold_fallback", op=op,
+                  reason="delta deletes edges; parent result is no longer "
+                         "an upper bound")
         return None
     return info
 
@@ -700,13 +704,16 @@ def incremental_sssp(g: Graph, source, parent_dist, *,
     if info is None:
         return None
     if weights is not None:
-        _log.info("incremental sssp: weighted run -> cold run")
+        _log.info("incremental.cold_fallback", op="sssp",
+                  reason="weighted run")
         return None
     if n_iter is not None:
-        _log.info("incremental sssp: capped run is not a fixpoint -> cold run")
+        _log.info("incremental.cold_fallback", op="sssp",
+                  reason="capped run is not a fixpoint")
         return None
     if np.ndim(source) != 0:
-        _log.info("incremental sssp: batched sources -> cold run")
+        _log.info("incremental.cold_fallback", op="sssp",
+                  reason="batched sources")
         return None
     if g.n_nodes == 0:
         return jnp.zeros((0,), jnp.float32)
@@ -748,8 +755,8 @@ def incremental_connected_components(g: Graph, parent_labels
     u = g.plan().undirected()
     uinfo = getattr(u, "_delta", None)
     if uinfo is None:
-        _log.info("incremental connected_components: undirected view was "
-                  "rebuilt (no delta lineage) -> cold run")
+        _log.info("incremental.cold_fallback", op="connected_components",
+                  reason="undirected view was rebuilt (no delta lineage)")
         return None
     if u.n_nodes == 0:
         return _undirected_ids_to_g(g, u, jnp.zeros((0,), jnp.int32))
@@ -784,9 +791,9 @@ def incremental_label_propagation(g: Graph, parent_labels, n_iter: int = 20
         return None
     u = g.plan().undirected()
     if int(n_iter) < u.n_nodes:
-        _log.info("incremental label_propagation: n_iter=%s < |V|=%d may cap "
-                  "the propagation (not a fixpoint) -> cold run",
-                  n_iter, u.n_nodes)
+        _log.info("incremental.cold_fallback", op="label_propagation",
+                  reason="n_iter < |V| may cap the propagation",
+                  n_iter=int(n_iter), n_nodes=u.n_nodes)
         return None
     return incremental_connected_components(g, parent_labels)
 

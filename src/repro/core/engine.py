@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..kernels.bsr_spmv import bsr_spmv
 from ..kernels.ops import auto_interpret
 from ..kernels.segment_sum import (DEFAULT_BLOCK, DEFAULT_CHUNK,
@@ -86,6 +87,24 @@ __all__ = ["BACKENDS", "select_backend", "get_exec", "push", "pull",
            "BsrExec", "FrontierExec"]
 
 BACKENDS = ("xla", "pallas", "bsr", "frontier")
+
+# -- observability instruments (module-cached: no registry lookup on the hot
+# path; all of them no-op on one attribute check when obs is disabled) -------
+_C_BACKEND = {b: obs.counter(f"engine.backend.{b}") for b in BACKENDS}
+_C_EXEC_HIT = obs.counter("engine.exec_cache.hits")
+_C_EXEC_MISS = obs.counter("engine.exec_cache.misses")
+_H_TOL_ITERS = obs.histogram("engine.fixpoint.tol_iters",
+                             buckets=obs.COUNT_BUCKETS)
+_H_FRONTIER = obs.histogram("engine.frontier.frontier_size",
+                            buckets=obs.COUNT_BUCKETS)
+_C_ROUNDS = obs.counter("engine.frontier.rounds")
+_C_DENSE = obs.counter("engine.frontier.dense_rounds")
+_C_SWITCH = obs.counter("engine.frontier.direction_switches")
+_C_RELAX = obs.counter("engine.frontier.relaxed_edges")
+_C_RETRACE = obs.counter("engine.frontier.retraces")
+# (rows, node bucket, edge budget, weighted, dtype) signatures already traced
+# by the bucketed-pow2 frontier steps: a new signature = one jit retrace
+_TRACED_SHAPES: set = set()
 
 # Auto-selection thresholds: below them the re-blocked kernels cannot beat
 # plain segment reductions (tile/chunk padding dominates).
@@ -130,13 +149,21 @@ def select_backend(plan, backend: Optional[str] = None,
     ``"pagerank"``, which has no sparse monotone formulation — resolves to
     ``"xla"`` so the call succeeds with identical results.
     """
+    resolved = _select_backend(plan, backend, op)
+    if obs.REGISTRY.enabled:
+        _C_BACKEND[resolved].inc()
+    return resolved
+
+
+def _select_backend(plan, backend: Optional[str],
+                    op: Optional[str]) -> str:
     if backend is not None:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
         return backend if backend_supports(backend, op) else "xla"
     env = os.environ.get("REPRO_ENGINE_BACKEND")
     if env:
-        return select_backend(plan, env, op)
+        return _select_backend(plan, env, op)
     # sparse-traversal ops on large graphs: the frontier path wins on any
     # device (it relaxes only active edges instead of all of them)
     if op in _FRONTIER_AUTO_OPS and plan.n_edges >= _FRONTIER_MIN_EDGES:
@@ -381,7 +408,9 @@ def get_exec(plan, backend: Optional[str] = None, *,
     key = (backend, interp, block, chunk)
     ex = plan.execs.get(key)
     if ex is not None:
+        _C_EXEC_HIT.inc()
         return ex
+    _C_EXEC_MISS.inc()
     base = (plan.n_nodes, plan.n_edges, plan.in_src, plan.in_dst,
             plan.out_src, plan.out_dst)
     if backend == "xla":
@@ -469,9 +498,12 @@ def _runner(body: Callable, fixed):
                     ns = body(ex, s, *args)
                     return ns, i + 1, _residual(s, ns)
 
-                final, _, _ = jax.lax.while_loop(
+                final, iters, _ = jax.lax.while_loop(
                     cond, step, (init, jnp.int32(0), jnp.float32(jnp.inf)))
-                return final
+                # the iteration counter rides along so the caller can expose
+                # warm-vs-cold convergence as a metric (one scalar, fetched
+                # only when obs is enabled and the call is not being traced)
+                return final, iters
         elif fixed:
             def run_py(ex, init, n_iter, *args):
                 return jax.lax.fori_loop(
@@ -497,7 +529,8 @@ def _runner(body: Callable, fixed):
 def fixpoint(plan_or_exec, body: Callable, init, *,
              n_iter: Optional[int] = None, max_iter: Optional[int] = None,
              tol: Optional[float] = None,
-             backend: Optional[str] = None, args: Tuple = ()):
+             backend: Optional[str] = None, args: Tuple = (),
+             obs_tag: Optional[str] = None):
     """Iterate ``body(exec, state, *args) -> state`` on the engine.
 
     With ``n_iter``: exactly that many rounds (fori_loop).  With ``tol``:
@@ -507,14 +540,30 @@ def fixpoint(plan_or_exec, body: Callable, init, *,
     delta) finish in a handful of rounds.  Otherwise: until the state stops
     changing, capped at ``max_iter`` (while_loop).  ``body`` must be a
     module-level function — the jitted runner is cached per body identity;
-    pass per-call parameters via ``args`` (traced).
+    pass per-call parameters via ``args`` (traced).  ``obs_tag`` names the
+    call in the tol-mode iteration-count metric
+    (``engine.fixpoint.tol_iters[.<tag>]``) — how warm-started solves show
+    their shortened convergence.
     """
     ex = (plan_or_exec if isinstance(plan_or_exec, XlaExec)
           else get_exec(plan_or_exec, backend))
     if tol is not None:
         cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
-        return _runner(body, "tol")(ex, init, jnp.int32(cap),
-                                    jnp.float32(tol), *args)
+        out, iters = _runner(body, "tol")(ex, init, jnp.int32(cap),
+                                          jnp.float32(tol), *args)
+        # skip the scalar fetch when disabled; under a jax trace (vmapped
+        # tol solves) the counter is abstract and cannot be observed
+        if obs.REGISTRY.enabled:
+            try:
+                n = int(iters)
+            except Exception:        # tracer-stage call: no concrete count
+                n = None
+            if n is not None:
+                _H_TOL_ITERS.observe(n)
+                if obs_tag:
+                    obs.histogram(f"engine.fixpoint.tol_iters.{obs_tag}",
+                                  buckets=obs.COUNT_BUCKETS).observe(n)
+        return out
     if n_iter is not None:
         return _runner(body, True)(ex, init, jnp.int32(n_iter), *args)
     cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
@@ -658,21 +707,49 @@ def frontier_fixpoint(plan_or_exec, init, frontier, *,
     mask = jnp.asarray(frontier, bool)
     stats = _frontier_stats(mask, ex.deg_pad[:-1])
     t = 0
-    while t < bound:
-        cnt, fe = (int(x) for x in np.asarray(stats))   # one fetch per round
-        if cnt == 0:
-            break
-        tj = jnp.int32(t)
-        if fe * _DENSE_EDGE_DIV >= ex.n_edges:
-            state, mask, stats = _frontier_dense_step(ex, state, w_in,
-                                                      caps_arr, tj)
-        else:
-            b = min(next_capacity(cnt, minimum=_MIN_BUCKET),
-                    next_capacity(max(n, 1)))
-            f_idx = jnp.nonzero(mask, size=b, fill_value=n)[0].astype(jnp.int32)
-            eb = next_capacity(max(fe, 1), minimum=_MIN_BUCKET)
-            state, mask, stats = _frontier_push_step(ex, state, f_idx, w_out,
-                                                     caps_arr, tj,
-                                                     e_budget=eb)
-        t += 1
+    reg_on = obs.REGISTRY.enabled
+    prev_dense: Optional[bool] = None
+    with obs.TRACER.span("engine.frontier_fixpoint", rows=k, nodes=n,
+                         edges=int(ex.n_edges),
+                         weighted=weights is not None) as fspan:
+        while t < bound:
+            cnt, fe = (int(x) for x in np.asarray(stats))  # one fetch/round
+            if cnt == 0:
+                break
+            tj = jnp.int32(t)
+            dense = fe * _DENSE_EDGE_DIV >= ex.n_edges
+            if reg_on:
+                _H_FRONTIER.observe(cnt)
+                _C_ROUNDS.inc()
+                _C_RELAX.inc(fe)
+                if dense:
+                    _C_DENSE.inc()
+                if prev_dense is not None and dense != prev_dense:
+                    _C_SWITCH.inc()
+            if dense:
+                rspan = obs.TRACER.span("engine.frontier.round", round=t,
+                                        frontier=cnt, edges=fe, mode="dense")
+                state, mask, stats = _frontier_dense_step(ex, state, w_in,
+                                                          caps_arr, tj)
+            else:
+                b = min(next_capacity(cnt, minimum=_MIN_BUCKET),
+                        next_capacity(max(n, 1)))
+                f_idx = jnp.nonzero(mask, size=b,
+                                    fill_value=n)[0].astype(jnp.int32)
+                eb = next_capacity(max(fe, 1), minimum=_MIN_BUCKET)
+                shape_sig = (k, b, eb, w_out is None, str(state.dtype))
+                if shape_sig not in _TRACED_SHAPES:
+                    _TRACED_SHAPES.add(shape_sig)
+                    if reg_on:
+                        _C_RETRACE.inc()
+                rspan = obs.TRACER.span("engine.frontier.round", round=t,
+                                        frontier=cnt, edges=fe,
+                                        mode="sparse", bucket=b, e_budget=eb)
+                state, mask, stats = _frontier_push_step(ex, state, f_idx,
+                                                         w_out, caps_arr, tj,
+                                                         e_budget=eb)
+            rspan.finish()
+            prev_dense = dense
+            t += 1
+        fspan.set(rounds=t)
     return state if batched else state[0]

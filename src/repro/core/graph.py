@@ -22,7 +22,6 @@ Capacities are power-of-two bucketed like tables.
 
 from __future__ import annotations
 
-import logging
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -30,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .provenance import track, version_of
 from .table import next_capacity
 
@@ -37,7 +37,10 @@ __all__ = ["Graph", "EdgeDelta", "INVALID_ID"]
 
 INVALID_ID = np.iinfo(np.int32).max
 
-_log = logging.getLogger(__name__)
+_log = obs.get_logger(__name__)
+_C_PLAN_HIT = obs.counter("engine.plan_cache.hits")
+_C_PLAN_MISS = obs.counter("engine.plan_cache.misses")
+_C_PLAN_PATCH = obs.counter("engine.plan_cache.patched")
 
 
 @dataclass(frozen=True)
@@ -252,10 +255,14 @@ class Graph:
         """
         if self._plan is None:
             from .plan import GraphPlan  # local import: plan -> kernels -> graph
+            _C_PLAN_MISS.inc()
             if self._delta is not None:
+                _C_PLAN_PATCH.inc()
                 self._plan = GraphPlan.patch(self, self._delta)
             else:
                 self._plan = GraphPlan.build(self)
+        else:
+            _C_PLAN_HIT.inc()
         return self._plan
 
     def invalidate_plan(self) -> None:
@@ -329,8 +336,8 @@ class Graph:
         _, known = _dense_lookup(valid, new_eps)
         if new_eps.size and not bool(np.all(known)):
             n_new = int(np.unique(new_eps[~known]).size)
-            _log.info("apply_delta: %d new node id(s) in inserts -> full "
-                      "rebuild (dense numbering shifts)", n_new)
+            _log.info("apply_delta.full_rebuild", new_nodes=n_new,
+                      reason="dense numbering shifts")
             return self._apply_delta_rebuild(delta)
 
         s, d = self.out_edges()

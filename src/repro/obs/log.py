@@ -1,0 +1,110 @@
+"""Structured logging for the repro stack: one event name + key=value fields.
+
+Replaces the scattered bare ``logging.getLogger(__name__).info("...%s...",
+x)`` calls with a uniform shape every consumer (a human tailing stderr, a
+log shipper, a test asserting on records) can parse::
+
+    _log = get_logger(__name__)
+    _log.info("apply_delta.full_rebuild", new_nodes=3)
+    # -> "apply_delta.full_rebuild new_nodes=3"
+
+Configuration is module-level and env-driven: the first :func:`get_logger`
+call installs one stderr handler on the ``"repro"`` root logger (unless the
+embedding application already configured one) and sets its level from
+``REPRO_OBS_LOG`` (``debug`` / ``info`` / ``warning`` / ``error``; default
+``warning``, so routine fallback notices stay quiet in tests and benches).
+The underlying stdlib loggers stay reachable via ``logging.getLogger`` for
+tests and embedders who want their own handlers or levels.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+import threading
+from typing import Any, Dict
+
+__all__ = ["get_logger", "StructLogger", "format_event"]
+
+_LEVELS = {"debug": logging.DEBUG, "info": logging.INFO,
+           "warning": logging.WARNING, "warn": logging.WARNING,
+           "error": logging.ERROR, "critical": logging.CRITICAL}
+
+_configured = False
+_config_lock = threading.Lock()
+
+
+def _ensure_configured() -> None:
+    global _configured
+    if _configured:
+        return
+    with _config_lock:
+        if _configured:
+            return
+        root = logging.getLogger("repro")
+        if not root.handlers:
+            h = logging.StreamHandler()
+            h.setFormatter(logging.Formatter(
+                "%(asctime)s %(levelname)s %(name)s :: %(message)s"))
+            root.addHandler(h)
+        lvl = os.environ.get("REPRO_OBS_LOG", "warning").strip().lower()
+        root.setLevel(_LEVELS.get(lvl, logging.WARNING))
+        _configured = True
+
+
+def format_event(event: str, fields: Dict[str, Any]) -> str:
+    if not fields:
+        return event
+    parts = []
+    for k in sorted(fields):
+        v = fields[k]
+        parts.append(f"{k}={v!r}" if isinstance(v, str) else f"{k}={v}")
+    return event + " " + " ".join(parts)
+
+
+class StructLogger:
+    """Thin structured facade over one stdlib logger."""
+
+    __slots__ = ("_log",)
+
+    def __init__(self, logger: logging.Logger):
+        self._log = logger
+
+    @property
+    def stdlib(self) -> logging.Logger:
+        return self._log
+
+    def _emit(self, level: int, event: str, fields: Dict[str, Any],
+              exc_info: bool = False) -> None:
+        if self._log.isEnabledFor(level):
+            self._log.log(level, format_event(event, fields),
+                          exc_info=exc_info)
+
+    def debug(self, event: str, **fields: Any) -> None:
+        self._emit(logging.DEBUG, event, fields)
+
+    def info(self, event: str, **fields: Any) -> None:
+        self._emit(logging.INFO, event, fields)
+
+    def warning(self, event: str, **fields: Any) -> None:
+        self._emit(logging.WARNING, event, fields)
+
+    def error(self, event: str, **fields: Any) -> None:
+        self._emit(logging.ERROR, event, fields)
+
+    def exception(self, event: str, **fields: Any) -> None:
+        """Error-level event with the active exception's traceback."""
+        self._emit(logging.ERROR, event, fields, exc_info=True)
+
+
+def get_logger(name: str = "repro") -> StructLogger:
+    """Structured logger under the ``"repro"`` hierarchy.
+
+    ``get_logger(__name__)`` from inside the package lands on the module's
+    natural logger; any other name is nested under ``repro.`` so one root
+    handler/level governs everything.
+    """
+    _ensure_configured()
+    if name != "repro" and not name.startswith("repro."):
+        name = f"repro.{name}"
+    return StructLogger(logging.getLogger(name))

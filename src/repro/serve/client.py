@@ -34,6 +34,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+from .. import obs
 from . import wire
 from .policy import ServiceError, error_from_wire
 
@@ -44,9 +45,14 @@ __all__ = ["RemoteService", "RemoteWorkspace", "RemoteSession",
 class RemotePending:
     """Client-side handle for a submitted request (mirrors ``Pending``)."""
 
-    def __init__(self, service: "RemoteService", request: Dict[str, Any]):
+    def __init__(self, service: "RemoteService", request: Dict[str, Any],
+                 trace: Optional[str] = None):
         self.service = service
         self.request = request
+        #: trace id this submit rode the wire under; pass it to
+        #: ``RemoteService.chrome_trace`` to fetch the server-side spans of
+        #: exactly this request
+        self.trace = trace
         self.done = False
         self.value: Any = None
         self.error: Optional[BaseException] = None
@@ -146,7 +152,8 @@ class RemoteService:
         with self._lock:
             self._rpcs[req_id] = waiter
         try:
-            self._send(req_id, {"kind": kind, **fields})
+            self._send(req_id, wire.attach_trace({"kind": kind, **fields},
+                                                 obs.current_trace()))
             if not waiter.event.wait(self.rpc_timeout):
                 raise TimeoutError(f"rpc {kind!r} timed out after "
                                    f"{self.rpc_timeout}s")
@@ -234,15 +241,21 @@ class RemoteService:
     def submit(self, session: "RemoteSession",
                request: Dict[str, Any]) -> RemotePending:
         req_id = self._next_id()
-        pending = RemotePending(self, dict(request))
+        # every remote submit rides under a trace id: an explicit one in the
+        # request, the calling thread's active trace, or a fresh mint — the
+        # id the server's spans and the result's provenance meta carry
+        trace = (request.get("trace") or obs.current_trace()
+                 or obs.new_trace_id())
+        pending = RemotePending(self, dict(request), trace=trace)
         with self._lock:
             self._pendings[req_id] = pending
         waiter = _RpcWaiter()
         with self._lock:
             self._rpcs[req_id] = waiter
         try:
-            self._send(req_id, {"kind": "submit", "session": session.name,
-                                "request": request})
+            self._send(req_id, wire.attach_trace(
+                {"kind": "submit", "session": session.name,
+                 "request": request}, trace))
             if not waiter.event.wait(self.rpc_timeout):
                 raise TimeoutError("submit rpc timed out")
         except BaseException:
@@ -278,6 +291,30 @@ class RemoteService:
 
     def session_stats(self, name: str) -> Dict[str, Any]:
         return self._rpc("session_stats", session=name)["stats"]
+
+    # -- observability -------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        """Server-side metrics snapshot (``repro.obs`` registry dict)."""
+        return self._rpc("obs_metrics")["metrics"]
+
+    def metrics_text(self) -> str:
+        """Server-side metrics in Prometheus text exposition format."""
+        return self._rpc("obs_metrics", fmt="prom")["text"]
+
+    def chrome_trace(self, trace: Optional[str] = None,
+                     path: Optional[str] = None) -> Dict[str, Any]:
+        """Server-side Chrome trace-event JSON (``chrome://tracing``).
+
+        ``trace`` filters to one trace id — pass a ``RemotePending.trace``
+        to see exactly that request's journey through admission, queueing,
+        batching and the engine.  ``path`` writes the JSON to a local file.
+        """
+        doc = self._rpc("obs_trace", trace=trace)["trace_events"]
+        if path is not None:
+            import json
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc
 
     def shutdown_server(self) -> None:
         """Ask the server process to drain and exit (if it allows it).

@@ -56,7 +56,6 @@ sequential use.  All entry points are thread-safe.
 
 from __future__ import annotations
 
-import logging
 import threading
 import time
 from collections import OrderedDict
@@ -66,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import algorithms as A
 from ..core import convert as C
 from ..core import provenance as prov
@@ -80,7 +80,7 @@ __all__ = ["Workspace", "Session", "GraphService", "Pending", "EdgeDelta",
            "ServiceError", "RejectedError", "DeadlineExpired",
            "SchedulerPolicy"]
 
-_log = logging.getLogger(__name__)
+_log = obs.get_logger(__name__)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +223,9 @@ def _sssp_weights_block_fusion(canon: Tuple[Tuple[str, Any], ...]) -> bool:
             return any(x < 0 for x in v[3])
         return True          # opaque / non-array literal: stay unfused
     return False
+
+
+_MISS = object()        # _cache_get sentinel: None is a valid cached value
 
 
 def _block(out: Any) -> Any:
@@ -391,6 +394,9 @@ class Pending:
     def __init__(self, session: Session, request: Dict[str, Any]):
         self.session = session
         self.request = request
+        #: trace id this request rides under (set from the request body or
+        #: the submit call; lands on provenance meta and every span)
+        self.trace: Optional[str] = request.get("trace")
         self.done = False
         self.value: Any = None
         self.error: Optional[BaseException] = None
@@ -524,6 +530,12 @@ class GraphService:
                       "engine_calls": 0, "rejected": 0, "expired": 0,
                       "batch_windows": 0, "retained": 0, "warm_starts": 0,
                       "incremental_fallbacks": 0}
+        # dedicated innermost lock for the ``stats`` dict: it is bumped from
+        # submitters (under self._lock), scheduler workers (under the
+        # scheduler's lock) and drain callers — a bare ``+=`` under two
+        # *different* outer locks is a lost-update race.  Every mutation
+        # goes through _bump; nothing else is ever taken while holding it.
+        self._stats_lock = threading.Lock()
         self.policy = policy if policy is not None else SchedulerPolicy()
         self.scheduler = Scheduler(self, self.policy)
         self._stop = threading.Event()
@@ -534,6 +546,13 @@ class GraphService:
                                  name=f"graph-service-worker-{i}")
             t.start()
             self._worker_threads.append(t)
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        """Increment a service counter (thread-safe) and mirror it to the
+        observability registry as ``service.<key>``."""
+        with self._stats_lock:
+            self.stats[key] += n
+        obs.counter(f"service.{key}").inc(n)
 
     def close(self) -> None:
         """Stop background workers, then drain whatever they left queued.
@@ -586,22 +605,33 @@ class GraphService:
         self.scheduler.forget_session(name)
 
     # -- submission ---------------------------------------------------------
-    def submit(self, session: Session, request: Dict[str, Any]) -> Pending:
+    def submit(self, session: Session, request: Dict[str, Any],
+               trace: Optional[str] = None) -> Pending:
         """Validate, prepare and enqueue a request.
 
         Raises :class:`RejectedError` (with ``retry_after``) when the
         session is over its in-flight quota or the service backlog is at
         its depth bound.  Preparation errors (unknown names, missing slots)
         resolve the returned :class:`Pending` instead of raising here.
+
+        ``trace`` attaches a trace id (e.g. one extracted from the wire) to
+        the request's spans and result provenance; without one the request
+        inherits the submitting thread's active trace, if any.
         """
         op = request.get("op")
         if op not in _OPS:
             raise ServiceError(f"unknown op {op!r}; have {sorted(_OPS)}")
         p = Pending(session, dict(request))
-        with self._lock:
-            self.stats["requests"] += 1
-        q = self._prepare(p)
-        if q is not None:
+        if trace is not None:
+            p.trace = trace
+        elif p.trace is None:
+            p.trace = obs.current_trace()
+        self._bump("requests")
+        with obs.TRACER.span("service.submit", trace=p.trace, op=op,
+                             session=session.name):
+            q = self._prepare(p)
+            if q is None:
+                return p
             # cache fast path: a repeated trial-and-error query resolves at
             # submit, skipping admission and the scheduler round trip — it
             # consumes no engine time, so there is nothing to admission-
@@ -614,6 +644,8 @@ class GraphService:
             hit, found = self._cache_get(q.cache_key, count_miss=False,
                                          session=p.session.name)
             if found:
+                obs.TRACER.instant("service.cache_hit_submit", trace=p.trace,
+                                   op=op, session=session.name)
                 self._finish(p, hit, cached=True)
                 return p
             self.scheduler.submit(q)
@@ -659,15 +691,19 @@ class GraphService:
         with self._lock:
             if key in self._cache:
                 self._cache.move_to_end(key)
-                self.stats["cache_hits"] += 1
                 if session is not None:
                     self._sess_counter(session)["cache_hits"] += 1
-                return self._cache[key], True
-            if count_miss:
-                self.stats["cache_misses"] += 1
-                if session is not None:
+                hit = self._cache[key]
+            else:
+                if count_miss and session is not None:
                     self._sess_counter(session)["cache_misses"] += 1
-            return None, False
+                hit = _MISS
+        if hit is not _MISS:
+            self._bump("cache_hits")
+            return hit, True
+        if count_miss:
+            self._bump("cache_misses")
+        return None, False
 
     def _cache_put(self, key: Optional[Tuple], value: Any) -> None:
         if key is None:
@@ -730,14 +766,19 @@ class GraphService:
         return self._cache_get(q.cache_key, session=q.session)
 
     def _finish_cached(self, q: QueuedRequest, value: Any) -> None:
+        obs.TRACER.instant("service.cache_hit", trace=q.pending.trace,
+                           op=q.op, session=q.session)
         self._finish(q.pending, value, cached=True)
 
     def _sched_meta(self, q: QueuedRequest, batch: int
                     ) -> Dict[str, Any]:
         """Queueing/coalescing metadata recorded on result provenance."""
         queued = q.pending.queued_ms
-        return {"queued_ms": 0.0 if queued is None else round(queued, 3),
+        meta = {"queued_ms": 0.0 if queued is None else round(queued, 3),
                 "batch": batch, "sched_mode": self.policy.mode}
+        if q.pending.trace is not None:
+            meta["trace"] = q.pending.trace
+        return meta
 
     # -- incremental maintenance (delta-aware serving) ----------------------
     def _delta_of(self, q: QueuedRequest):
@@ -801,12 +842,12 @@ class GraphService:
                                    q.payload["params"]):
                 return False
         except Exception:
-            _log.exception("retention predicate failed for %s; running cold",
-                           q.op)
+            _log.exception("retention.predicate_failed", op=q.op,
+                           session=q.session, action="running cold")
             return False
         self._cache_put(q.cache_key, parent_val)
+        self._bump("retained")
         with self._lock:
-            self.stats["retained"] += 1
             self._sess_counter(q.session)["retained"] += 1
         return True
 
@@ -864,13 +905,14 @@ class GraphService:
                     out = A.incremental_label_propagation(
                         g, parent_val, n_iter=params.get("n_iter", 20))
         except Exception:
-            _log.exception("warm start failed for %s; running cold", op)
+            _log.exception("warm_start.failed", op=op, session=q.session,
+                           action="running cold")
             out = None
-        with self._lock:
-            if out is None:
-                self.stats["incremental_fallbacks"] += 1
-            else:
-                self.stats["warm_starts"] += 1
+        if out is None:
+            self._bump("incremental_fallbacks")
+            _log.info("incremental_fallback", op=op, session=q.session)
+        else:
+            self._bump("warm_starts")
         return None if out is None else _block(out)
 
     def _run_group(self, group: List[QueuedRequest]) -> float:
@@ -887,27 +929,30 @@ class GraphService:
         q0 = group[0]
         op = q0.op
         fn, _ = _OPS[op]
-        with self._lock:
-            self.stats["engine_calls"] += 1
-            if len(group) > 1:
-                self.stats["fused_calls"] += 1
-                self.stats["fused_requests"] += len(group)
+        self._bump("engine_calls")
+        if len(group) > 1:
+            self._bump("fused_calls")
+            self._bump("fused_requests", len(group))
         if q0.fuse_key is None:
             t0 = time.perf_counter()
-            out = self._try_warm(q0)
-            if out is None:
-                out = _block(fn(**dict(q0.payload["inputs"]),
-                                **q0.payload["params"]))
-                dt = (time.perf_counter() - t0) * 1e3
-                prov.annotate_last(out, self._sched_meta(q0, 1))
-            else:
-                # warm-started: the recorded provenance is the equivalent
-                # cold call (the warm init would be an opaque array), with
-                # the warm start visible only as metadata
-                dt = (time.perf_counter() - t0) * 1e3
-                meta = dict(self._sched_meta(q0, 1), incremental=True)
-                prov.record_call(_PROV_ANY[op], q0.payload["inputs"],
-                                 q0.payload["params"], out, meta=meta)
+            with obs.TRACER.span(f"engine.{op}", trace=q0.pending.trace,
+                                 op=op, batch=1, session=q0.session) as esp:
+                out = self._try_warm(q0)
+                if out is None:
+                    esp.set(warm=False)
+                    out = _block(fn(**dict(q0.payload["inputs"]),
+                                    **q0.payload["params"]))
+                    dt = (time.perf_counter() - t0) * 1e3
+                    prov.annotate_last(out, self._sched_meta(q0, 1))
+                else:
+                    # warm-started: the recorded provenance is the equivalent
+                    # cold call (the warm init would be an opaque array), with
+                    # the warm start visible only as metadata
+                    esp.set(warm=True)
+                    dt = (time.perf_counter() - t0) * 1e3
+                    meta = dict(self._sched_meta(q0, 1), incremental=True)
+                    prov.record_call(_PROV_ANY[op], q0.payload["inputs"],
+                                     q0.payload["params"], out, meta=meta)
             self._cache_put(q0.cache_key, out)
             self._finish(q0.pending, out)
             return dt
@@ -923,17 +968,21 @@ class GraphService:
             if n_iters[0] is not None:
                 kw["n_iter"] = n_iters[0]
             t0 = time.perf_counter()
-            out = self._try_warm(q0)
-            if out is None:
-                out = _block(fn(g, sources[0], **kw))
-                dt = (time.perf_counter() - t0) * 1e3
-                prov.annotate_last(out, self._sched_meta(q0, 1))
-            else:
-                dt = (time.perf_counter() - t0) * 1e3
-                meta = dict(self._sched_meta(q0, 1), incremental=True)
-                prov.record_call(_PROV_ANY[op], [("g", g)],
-                                 {**kw, src_param: sources[0]}, out,
-                                 meta=meta)
+            with obs.TRACER.span(f"engine.{op}", trace=q0.pending.trace,
+                                 op=op, batch=1, session=q0.session) as esp:
+                out = self._try_warm(q0)
+                if out is None:
+                    esp.set(warm=False)
+                    out = _block(fn(g, sources[0], **kw))
+                    dt = (time.perf_counter() - t0) * 1e3
+                    prov.annotate_last(out, self._sched_meta(q0, 1))
+                else:
+                    esp.set(warm=True)
+                    dt = (time.perf_counter() - t0) * 1e3
+                    meta = dict(self._sched_meta(q0, 1), incremental=True)
+                    prov.record_call(_PROV_ANY[op], [("g", g)],
+                                     {**kw, src_param: sources[0]}, out,
+                                     meta=meta)
             self._cache_put(q0.cache_key, out)
             self._finish(q0.pending, out)
             return dt
@@ -949,7 +998,13 @@ class GraphService:
             caps = [default if ni is None else int(ni) for ni in n_iters]
             kw = dict(params, n_iter=np.asarray(caps, np.int32))
         t0 = time.perf_counter()
-        rows = _block(fn(g, jnp.asarray(sources, dtype=jnp.int32), **kw))
+        with obs.TRACER.span(
+                f"engine.{op}", trace=q0.pending.trace,
+                traces=[m.pending.trace for m in group
+                        if m.pending.trace is not None],
+                op=op, batch=len(group),
+                sources=sources if len(sources) <= 16 else len(sources)):
+            rows = _block(fn(g, jnp.asarray(sources, dtype=jnp.int32), **kw))
         dt = (time.perf_counter() - t0) * 1e3
         for i, m in enumerate(group):
             row = rows[i]

@@ -47,9 +47,21 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
+from .. import obs
 from .policy import DeadlineExpired, RejectedError, SchedulerPolicy
 
 __all__ = ["QueuedRequest", "Scheduler"]
+
+# scheduler-level instruments: admission outcomes, backlog depth, the
+# queued-vs-engine split every request pays, and batch composition
+_C_ADMIT = obs.counter("sched.admitted")
+_C_REJECT = obs.counter("sched.rejected")
+_C_EXPIRE = obs.counter("sched.expired")
+_C_WINDOWS = obs.counter("sched.batch_windows")
+_G_DEPTH = obs.gauge("sched.queue_depth")
+_H_QUEUED = obs.histogram("sched.queued_ms")
+_H_ENGINE = obs.histogram("sched.engine_ms")
+_H_BATCH = obs.histogram("sched.batch_size", buckets=obs.COUNT_BUCKETS)
 
 
 @dataclass
@@ -197,17 +209,17 @@ class Scheduler:
             quota = adm.quota_for(q.session)
             if st.inflight >= quota:
                 st.rejected += 1
-                self.service.stats["rejected"] += 1
                 retry = max(adm.min_retry_after_s,
                             st.inflight * self._est_ms / 1e3)
+                self._reject(q, "quota", retry)
                 raise RejectedError(
                     f"session {q.session!r} is at its in-flight quota "
                     f"({quota})", retry)
             if self._total_queued >= adm.max_queue_depth:
                 st.rejected += 1
-                self.service.stats["rejected"] += 1
                 retry = max(adm.min_retry_after_s,
                             self._total_queued * self._est_ms / 1e3)
+                self._reject(q, "queue_depth", retry)
                 raise RejectedError(
                     f"service backlog is at its queue-depth bound "
                     f"({adm.max_queue_depth})", retry)
@@ -216,7 +228,17 @@ class Scheduler:
             st.inflight += 1
             st.queue.append(q)
             self._total_queued += 1
+            _C_ADMIT.inc()
+            _G_DEPTH.set(self._total_queued)
             self._cond.notify_all()
+
+    def _reject(self, q: QueuedRequest, reason: str, retry: float) -> None:
+        """Admission-reject accounting: service counter + trace instant."""
+        self.service._bump("rejected")
+        _C_REJECT.inc()
+        obs.TRACER.instant("sched.reject", trace=q.pending.trace,
+                           op=q.op, session=q.session, reason=reason,
+                           retry_after=round(retry, 3))
 
     # -- selection ----------------------------------------------------------
     def _waiting_locked(self) -> List[_SessionState]:
@@ -233,6 +255,7 @@ class Scheduler:
             st = self._pick_fair_locked(waiting)
         q = st.queue.popleft()
         self._total_queued -= 1
+        _G_DEPTH.set(self._total_queued)
         self._rr_last = st.name
         return q
 
@@ -286,6 +309,9 @@ class Scheduler:
                 else:
                     kept.append(item)
             st.queue = kept
+        if out:
+            with self._lock:
+                _G_DEPTH.set(self._total_queued)
         return out
 
     def _gather(self, q: QueuedRequest, allow_wait: bool
@@ -304,7 +330,8 @@ class Scheduler:
             if allow_wait and len(group) < bp.max_batch:
                 window = bp.effective_window_s(self._total_queued)
                 if window > 0:
-                    self.service.stats["batch_windows"] += 1
+                    self.service._bump("batch_windows")
+                    _C_WINDOWS.inc()
                     deadline = time.perf_counter() + window
                     while True:
                         remaining = deadline - time.perf_counter()
@@ -336,7 +363,10 @@ class Scheduler:
     def _expire(self, q: QueuedRequest) -> None:
         with self._lock:
             self._state(q.session).expired += 1
-            self.service.stats["expired"] += 1
+        self.service._bump("expired")
+        _C_EXPIRE.inc()
+        obs.TRACER.instant("sched.expired", trace=q.pending.trace,
+                           op=q.op, session=q.session)
         q.pending._resolve(error=DeadlineExpired(
             f"request {q.op!r} from session {q.session!r} spent its "
             f"deadline in the queue; dropped before execution"))
@@ -362,6 +392,7 @@ class Scheduler:
             self._expire(q)
             return
         q.pending.dispatched_at = now
+        self._queued_span(q)
         hit, found = self.service._cache_lookup(q)
         if found:
             self.service._finish_cached(q, hit)
@@ -370,16 +401,42 @@ class Scheduler:
         group = [q]
         if q.fuse_key is not None:
             group = self._filter_group(self._gather(q, allow_wait))
+        if not group:
+            return                       # every member expired or hit cache
+        _H_BATCH.observe(len(group))
+        with self._lock:                 # DRR state that won this pick
+            deficit_ms = round(self._state(q.session).deficit_ms, 3)
         t0 = time.perf_counter()
+        sp = obs.TRACER.span(
+            "sched.execute", trace=q.pending.trace,
+            traces=[m.pending.trace for m in group
+                    if m.pending.trace is not None],
+            op=q.op, batch=len(group),
+            sessions=sorted({m.session for m in group}),
+            deficit_ms=deficit_ms)
         try:
-            engine_ms = self.service._run_group(group)
+            with sp:
+                engine_ms = self.service._run_group(group)
+                sp.set(engine_ms=round(engine_ms, 3))
         except Exception as e:           # resolve, don't poison the loop
             engine_ms = (time.perf_counter() - t0) * 1e3
             for m in group:
                 if not m.pending.done:
                     m.pending._resolve(error=e)
+        _H_ENGINE.observe(engine_ms)
         for m in group:
             self._done(m, engine_ms / max(len(group), 1))
+
+    def _queued_span(self, q: QueuedRequest) -> None:
+        """Record the dispatch wait retroactively from the two stamps the
+        Pending already keeps (submit happened on another thread)."""
+        p = q.pending
+        if p.dispatched_at is None:
+            return
+        _H_QUEUED.observe((p.dispatched_at - p.submitted_at) * 1e3)
+        obs.TRACER.add_complete("sched.queued", p.submitted_at,
+                                p.dispatched_at, trace=p.trace, op=q.op,
+                                session=q.session)
 
     def _filter_group(self, group: List[QueuedRequest]
                       ) -> List[QueuedRequest]:
@@ -392,6 +449,7 @@ class Scheduler:
                 continue
             if m is not group[0]:
                 m.pending.dispatched_at = now
+                self._queued_span(m)
                 hit, found = self.service._cache_lookup(m)
                 if found:
                     self.service._finish_cached(m, hit)

@@ -45,6 +45,7 @@ import sys
 import threading
 from typing import Any, Dict, Optional, Tuple
 
+from .. import obs
 from . import wire
 from .graph_service import EdgeDelta, GraphService, Session
 from .policy import SchedulerPolicy, error_to_wire
@@ -64,6 +65,9 @@ class _Connection:
             queue.Queue()
         self.closed = threading.Event()
         self.sessions: Dict[str, Session] = {}
+        # trace id of the frame currently being dispatched; only the one
+        # reader thread of this connection ever touches it
+        self._trace: Optional[str] = None
         self.reader = threading.Thread(target=self._read_loop, daemon=True,
                                        name=f"serve-read-{conn_id}")
         self.writer = threading.Thread(target=self._write_loop, daemon=True,
@@ -139,6 +143,7 @@ class _Connection:
     def _dispatch(self, req_id: int, msg: Any) -> None:
         if not isinstance(msg, dict):
             raise wire.WireError("request payload must be a dict")
+        self._trace = wire.extract_trace(msg)
         kind = msg.get("kind")
         handler = getattr(self, f"_op_{kind}", None)
         if handler is None:
@@ -147,7 +152,9 @@ class _Connection:
                 "message": f"unknown request kind {kind!r}"})
             return
         try:
-            reply = handler(req_id, msg)
+            with obs.TRACER.span(f"rpc.{kind}", trace=self._trace,
+                                 conn=self.conn_id, cat="rpc"):
+                reply = handler(req_id, msg)
         except Exception as e:
             self.send(wire.FrameType.ERROR, req_id, error_to_wire(e))
             return
@@ -214,7 +221,8 @@ class _Connection:
         # raises RejectedError / ServiceError -> typed ERROR frame; the
         # client's submit() sees the same admission verdict an in-process
         # caller would, retry_after included
-        pending = self.server.service.submit(sess, dict(msg["request"]))
+        pending = self.server.service.submit(sess, dict(msg["request"]),
+                                             trace=self._trace)
         self.send(wire.FrameType.OK, req_id, {"submitted": True})
         pending.add_done_callback(
             lambda p, rid=req_id: self._stream_result(rid, p))
@@ -235,7 +243,21 @@ class _Connection:
         return {}
 
     def _op_stats(self, req_id: int, msg: dict) -> dict:
-        return {"stats": dict(self.server.service.stats)}
+        with self.server.service._stats_lock:
+            return {"stats": dict(self.server.service.stats)}
+
+    def _op_obs_metrics(self, req_id: int, msg: dict) -> dict:
+        """Server-side metrics snapshot: ``fmt="json"`` (default) ships the
+        registry snapshot dict, ``fmt="prom"`` the Prometheus text."""
+        if msg.get("fmt") == "prom":
+            return {"text": obs.dump_metrics("prom")}
+        return {"metrics": obs.dump_metrics("json")}
+
+    def _op_obs_trace(self, req_id: int, msg: dict) -> dict:
+        """Chrome trace-event JSON of the server's span buffer; ``trace``
+        filters to one trace id (how a client fetches its own requests)."""
+        return {"trace_events":
+                obs.export_chrome_trace(trace=msg.get("trace"))}
 
     def _op_session_stats(self, req_id: int, msg: dict) -> dict:
         key = f"{self.conn_id}/{msg['session']}"

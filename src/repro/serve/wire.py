@@ -55,6 +55,9 @@ __all__ = [
     "read_frame",
     "pack_object",
     "unpack_object",
+    "TRACE_KEY",
+    "attach_trace",
+    "extract_trace",
 ]
 
 PROTOCOL_VERSION = 1
@@ -69,6 +72,28 @@ _ZERO_COPY_MIN = 4096
 
 class WireError(RuntimeError):
     """Malformed, truncated, oversized or version-incompatible frame."""
+
+
+#: reserved key carrying a request's trace id inside REQUEST payload dicts —
+#: rides the existing value encoding, so the frame header (and the protocol
+#: version) is unchanged and peers that ignore it interoperate
+TRACE_KEY = "_trace"
+
+
+def attach_trace(msg: Dict[str, Any], trace: Optional[str]) -> Dict[str, Any]:
+    """Stamp ``trace`` into an RPC payload dict (no-op when None)."""
+    if trace is not None:
+        msg[TRACE_KEY] = trace
+    return msg
+
+
+def extract_trace(msg: Any) -> Optional[str]:
+    """Pop and return the trace id of an RPC payload dict, if any."""
+    if isinstance(msg, dict):
+        t = msg.pop(TRACE_KEY, None)
+        if isinstance(t, str):
+            return t
+    return None
 
 
 class FrameType:

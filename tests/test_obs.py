@@ -1,0 +1,349 @@
+"""Observability subsystem (repro/obs): registry semantics, trace spans,
+structured logging, and the engine instrumentation hooks.
+
+Registry/tracer unit tests run against *fresh* instances so they are immune
+to what other tests recorded into the module-level ``obs.REGISTRY`` /
+``obs.TRACER``; the engine-integration tests use the globals (that is the
+wiring under test) and scope their assertions to deltas or to spans they
+can identify unambiguously.
+"""
+
+import gc
+import json
+import logging
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import algorithms as A
+from repro.core.graph import Graph
+from repro.obs.log import format_event, get_logger
+from repro.obs.metrics import (COUNT_BUCKETS, Registry,
+                               quantile_from_snapshot)
+from repro.obs.trace import NOOP_SPAN, Tracer
+
+
+def small_graph():
+    src = np.array([0, 1, 2, 3, 0, 1], np.int32)
+    dst = np.array([1, 2, 3, 0, 2, 3], np.int32)
+    return Graph.from_edges(src, dst)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_basics_and_identity():
+    reg = Registry()
+    c = reg.counter("c")
+    assert reg.counter("c") is c          # create-or-return by name
+    c.inc()
+    c.inc(5)
+    assert c.value == 6
+    g = reg.gauge("g")
+    g.set(3.5)
+    g.add(-1.0)
+    assert g.value == 2.5
+
+
+def test_kind_mismatch_raises():
+    reg = Registry()
+    reg.counter("x")
+    with pytest.raises(TypeError, match="x.*Counter"):
+        reg.histogram("x")
+
+
+def test_histogram_le_bucket_edges():
+    """Prometheus ``le`` semantics: a value exactly on an edge counts in
+    that edge's bucket; above the last edge goes to +Inf overflow."""
+    reg = Registry()
+    h = reg.histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 4.0, 99.0):
+        h.observe(v)
+    snap = reg.snapshot()["h"]
+    assert snap["buckets"] == [1.0, 2.0, 4.0]
+    assert snap["counts"] == [2, 2, 1, 1]   # le=1: {0.5,1.0}; le=2: {1.5,2.0}
+    assert snap["count"] == 6
+    assert snap["sum"] == pytest.approx(108.0)
+
+
+def test_histogram_quantile_interpolates():
+    reg = Registry()
+    h = reg.histogram("h", buckets=(10.0, 20.0, 40.0))
+    for _ in range(100):
+        h.observe(15.0)                   # all mass in the (10, 20] bucket
+    p50 = h.quantile(0.5)
+    assert 10.0 <= p50 <= 20.0
+    assert h.quantile(0.0) is not None
+    assert reg.histogram("empty").quantile(0.5) is None
+    # remote consumers compute the same quantile from the snapshot
+    assert quantile_from_snapshot(reg.snapshot()["h"], 0.5) == \
+        pytest.approx(p50)
+
+
+def test_snapshot_isolation():
+    reg = Registry()
+    c = reg.counter("c")
+    h = reg.histogram("h")
+    c.inc(3)
+    h.observe(1.0)
+    snap = reg.snapshot()
+    c.inc(100)
+    h.observe(2.0)
+    assert snap["c"]["value"] == 3
+    assert snap["h"]["count"] == 1
+
+
+def test_prometheus_exposition():
+    reg = Registry()
+    reg.counter("service.requests").inc(7)
+    h = reg.histogram("sched.engine_ms", buckets=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(5.0)
+    txt = reg.to_prometheus()
+    assert "# TYPE repro_service_requests counter" in txt
+    assert "repro_service_requests 7" in txt
+    # bucket counts are cumulative and end at +Inf
+    assert 'repro_sched_engine_ms_bucket{le="1"} 1' in txt
+    assert 'repro_sched_engine_ms_bucket{le="10"} 2' in txt
+    assert 'repro_sched_engine_ms_bucket{le="+Inf"} 2' in txt
+    assert "repro_sched_engine_ms_count 2" in txt
+
+
+def test_reset_zeroes_but_keeps_instruments():
+    reg = Registry()
+    c = reg.counter("c")
+    c.inc(9)
+    reg.reset()
+    assert c.value == 0
+    assert reg.counter("c") is c          # module-global refs stay valid
+    c.inc()
+    assert c.value == 1
+
+
+def test_disabled_mode_is_allocation_free():
+    reg = Registry(enabled=False)
+    tr = Tracer(enabled=False)
+    c = reg.counter("c")
+    h = reg.histogram("h")
+
+    assert tr.span("s") is NOOP_SPAN      # shared no-op singleton
+
+    def burn():
+        for _ in range(1000):
+            c.inc()
+            h.observe(3.0)
+            s = tr.span("s")
+            s.finish()
+            tr.instant("i")
+
+    burn()                                # warm any lazy caches
+    gc.collect()
+    before = sys.getallocatedblocks()
+    burn()
+    gc.collect()
+    after = sys.getallocatedblocks()
+    assert after - before < 50            # net-zero: nothing retained
+    assert c.value == 0
+    assert len(tr) == 0
+
+
+def test_disabled_updates_do_not_count():
+    reg = Registry(enabled=True)
+    c = reg.counter("c")
+    c.inc()
+    reg.disable()
+    c.inc(100)
+    reg.enable()
+    c.inc()
+    assert c.value == 2
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_inherits_trace_and_parent():
+    tr = Tracer()
+    tid = tr.new_trace_id()
+    with tr.span("outer", trace=tid) as outer:
+        with tr.span("inner") as inner:
+            assert inner.trace == tid
+            assert inner.parent_id == outer.span_id
+    doc = tr.export_chrome_trace(trace=tid)
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert names == {"outer", "inner"}
+
+
+def test_export_filters_by_trace_and_membership():
+    tr = Tracer()
+    t1, t2 = tr.new_trace_id(), tr.new_trace_id()
+    tr.span("a", trace=t1).finish()
+    tr.span("b", trace=t2).finish()
+    # a fused batch span belongs to every member's trace via ``traces``
+    tr.span("fused", trace=t1, traces=[t1, t2]).finish()
+    names1 = {e["name"] for e in
+              tr.export_chrome_trace(trace=t1)["traceEvents"]
+              if e["ph"] == "X"}
+    names2 = {e["name"] for e in
+              tr.export_chrome_trace(trace=t2)["traceEvents"]
+              if e["ph"] == "X"}
+    assert names1 == {"a", "fused"}
+    assert names2 == {"b", "fused"}
+
+
+def test_chrome_trace_schema(tmp_path):
+    tr = Tracer()
+    with tr.span("work", foo=1):
+        tr.instant("marker")
+    path = tmp_path / "trace.json"
+    doc = tr.export_chrome_trace(str(path))
+    # the on-disk file is the same JSON document
+    assert json.loads(path.read_text()) == doc
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    x = [e for e in evs if e["ph"] == "X"]
+    i = [e for e in evs if e["ph"] == "i"]
+    m = [e for e in evs if e["ph"] == "M"]
+    assert len(x) == 1 and len(i) == 1 and len(m) == 1
+    assert x[0]["name"] == "work" and x[0]["dur"] >= 0
+    assert x[0]["args"]["foo"] == 1
+    for e in x + i:
+        assert isinstance(e["ts"], float) and isinstance(e["tid"], int)
+    assert m[0]["name"] == "thread_name"
+
+
+def test_add_complete_records_retroactively():
+    tr = Tracer()
+    t0 = time.perf_counter()
+    t1 = t0 + 0.005
+    tr.add_complete("queued", t0, t1, trace="tx", op="bfs")
+    ev = tr.export_chrome_trace(trace="tx")["traceEvents"][0]
+    assert ev["name"] == "queued"
+    assert ev["dur"] == pytest.approx(5000.0, rel=0.01)   # µs
+
+
+def test_span_exit_records_error_name():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("x")
+    ev = tr.export_chrome_trace()["traceEvents"][0]
+    assert ev["args"]["error"] == "ValueError"
+
+
+def test_ring_buffer_bounds_memory():
+    tr = Tracer(capacity=8)
+    for i in range(100):
+        tr.span(f"s{i}").finish()
+    assert len(tr) == 8
+
+
+def test_cross_thread_spans_land_on_distinct_rows():
+    tr = Tracer()
+
+    def work():
+        tr.span("worker-span").finish()
+
+    t = threading.Thread(target=work)
+    t.start()
+    t.join()
+    tr.span("main-span").finish()
+    doc = tr.export_chrome_trace()
+    tids = {e["tid"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert len(tids) == 2
+
+
+# ---------------------------------------------------------------------------
+# structured logging
+# ---------------------------------------------------------------------------
+
+
+def test_format_event_sorts_and_quotes():
+    assert format_event("ev", {}) == "ev"
+    assert format_event("ev", {"b": 2, "a": "x"}) == "ev a='x' b=2"
+
+
+def test_struct_logger_emits_through_repro_hierarchy():
+    records = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            records.append(record)
+
+    lg = get_logger("repro.obs_test")
+    root = logging.getLogger("repro")
+    h = Capture()
+    old = root.level
+    root.addHandler(h)
+    root.setLevel(logging.INFO)
+    try:
+        lg.info("incremental_fallback", op="bfs", session="s1")
+        lg.debug("hidden")                # below level: not emitted
+    finally:
+        root.removeHandler(h)
+        root.setLevel(old)
+    msgs = [r.getMessage() for r in records]
+    assert "incremental_fallback op='bfs' session='s1'" in msgs
+    assert "hidden" not in msgs
+
+
+def test_get_logger_prefixes_foreign_names():
+    assert get_logger("elsewhere").stdlib.name == "repro.elsewhere"
+    assert get_logger("repro.core.graph").stdlib.name == "repro.core.graph"
+
+
+# ---------------------------------------------------------------------------
+# engine integration: frontier rounds, tol iterations
+# ---------------------------------------------------------------------------
+
+
+def test_frontier_fixpoint_emits_round_spans_and_metrics():
+    g = small_graph()
+    rounds_before = obs.counter("engine.frontier.rounds").value
+    hist = obs.histogram("engine.frontier.frontier_size",
+                         buckets=COUNT_BUCKETS)
+    n_before = hist.count
+    tid = obs.new_trace_id()
+    with obs.span("test.frontier_probe", trace=tid):
+        levels = A.bfs(g, 0, backend="frontier")
+    assert np.asarray(levels).tolist() == [0, 1, 1, 2]
+    assert obs.counter("engine.frontier.rounds").value > rounds_before
+    assert hist.count > n_before
+    doc = obs.export_chrome_trace(trace=tid)
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert "engine.frontier_fixpoint" in names
+    rounds = [e for e in doc["traceEvents"]
+              if e["name"] == "engine.frontier.round"]
+    assert rounds, "per-round spans missing from the trace"
+    assert all("frontier" in e["args"] for e in rounds)
+    # first round explores from the single source
+    assert rounds[0]["args"]["frontier"] == 1
+
+
+def test_pagerank_tol_iterations_observed_cold_vs_warm():
+    g = small_graph()
+    cold = obs.histogram("engine.fixpoint.tol_iters.pagerank",
+                         buckets=COUNT_BUCKETS)
+    warm = obs.histogram("engine.fixpoint.tol_iters.pagerank_warm",
+                         buckets=COUNT_BUCKETS)
+    c0, w0 = cold.count, warm.count
+    pr = A.pagerank(g, tol=1e-6)
+    assert cold.count == c0 + 1 and warm.count == w0
+    A.pagerank(g, tol=1e-6, init=pr)
+    assert warm.count == w0 + 1
+
+
+def test_dump_metrics_formats():
+    obs.counter("test.dump_probe").inc()
+    snap = obs.dump_metrics()
+    assert snap["test.dump_probe"]["type"] == "counter"
+    assert "# TYPE" in obs.dump_metrics("prom")
+    with pytest.raises(ValueError):
+        obs.dump_metrics("xml")

@@ -313,6 +313,10 @@ def test_two_clients_share_workspace_and_fair_share_sees_two_sessions(
         t2 = threading.Thread(target=work, args=("b", client2))
         t1.start(); t2.start(); t1.join(60); t2.join(60)
         assert len(results["a"]) == 3 and len(results["b"]) == 3
+        # result() resolves before the scheduler's completion accounting
+        # runs (_run_group resolves, _done charges afterwards) — wait for
+        # idle so the counters are settled before reading them
+        assert server.service.scheduler.wait_idle(timeout=10.0)
         # distinct principals server-side: same client session name, two
         # connection-scoped scheduler sessions
         s1 = client1.session_stats("w")
@@ -447,3 +451,122 @@ def test_protocol_version_mismatch_rejected(served):
         assert "protocol" in payload["message"]
     finally:
         raw.close()
+
+
+# ---------------------------------------------------------------------------
+# observability: trace propagation + metrics over the wire
+# ---------------------------------------------------------------------------
+
+
+def _span_names(client, trace):
+    doc = client.chrome_trace(trace=trace)
+    return {e["name"] for e in doc["traceEvents"] if e["ph"] in ("X", "i")}
+
+
+def test_trace_id_reaches_provenance_and_chrome_trace(served):
+    _, client = served
+    sess = client.session("s")
+    p = sess.submit({"op": "bfs", "graph": "g", "params": {"source": 3}})
+    v = p.result(60)
+    assert p.trace                        # minted client-side at submit
+    # ...lands on the server-side result's provenance metadata...
+    assert ("trace", p.trace) in P.records_of(v)[-1].meta
+    # ...and filters the server's Chrome trace down to this request
+    names = _span_names(client, p.trace)
+    assert {"rpc.submit", "service.submit", "sched.execute",
+            "engine.bfs"} <= names
+    doc = client.chrome_trace(trace=p.trace)
+    for e in doc["traceEvents"]:
+        if e["ph"] in ("X", "i"):
+            args = e["args"]
+            assert args.get("trace") == p.trace \
+                or p.trace in args.get("traces", [])
+
+
+def test_fused_requests_share_engine_span_across_traces(served):
+    _, client = served
+    sess = client.session("s")
+    p1 = sess.submit({"op": "sssp", "graph": "g", "params": {"source": 0}})
+    p2 = sess.submit({"op": "sssp", "graph": "g", "params": {"source": 1}})
+    client.flush()
+    p1.result(60), p2.result(60)
+    assert p1.fused and p2.fused and p1.trace != p2.trace
+    for p in (p1, p2):
+        doc = client.chrome_trace(trace=p.trace)
+        exe = [e for e in doc["traceEvents"] if e["name"] == "sched.execute"]
+        assert exe and exe[0]["args"]["batch"] == 2
+        assert {p1.trace, p2.trace} <= set(exe[0]["args"]["traces"])
+
+
+def test_cached_request_traced_as_cache_hit(served):
+    _, client = served
+    sess = client.session("s")
+    p1 = sess.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 3}})
+    client.flush()
+    p1.result(60)
+    p2 = sess.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 3}})
+    p2.result(60)
+    assert p2.cached
+    names = _span_names(client, p2.trace)
+    assert "service.cache_hit_submit" in names
+    assert "engine.pagerank" not in names     # never reached the engine
+
+
+def test_rejected_request_traced_with_reason(served):
+    server, client = served
+    server.service.policy.admission.inflight_overrides["c1/greedy"] = 1
+    sess = client.session("greedy")
+    ok = sess.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 2}})
+    tid = "t-test-rejected"
+    with pytest.raises(RejectedError):
+        sess.submit({"op": "pagerank", "graph": "g",
+                     "params": {"n_iter": 2}, "trace": tid})
+    doc = client.chrome_trace(trace=tid)
+    rej = [e for e in doc["traceEvents"] if e["name"] == "sched.reject"]
+    assert rej and rej[0]["args"]["reason"] == "quota"
+    assert rej[0]["args"]["retry_after"] > 0
+    client.flush()
+    ok.result(60)
+
+
+def test_deadline_expired_request_traced(served):
+    _, client = served
+    sess = client.session("s")
+    p = sess.submit({"op": "pagerank", "graph": "g",
+                     "params": {"n_iter": 2}, "deadline_ms": 0.0,
+                     "trace": "t-test-expired"})
+    time.sleep(0.01)
+    client.flush()
+    with pytest.raises(DeadlineExpired):
+        p.result(60)
+    names = _span_names(client, "t-test-expired")
+    assert "sched.expired" in names
+    assert "engine.pagerank" not in names
+
+
+def test_metrics_snapshot_over_the_wire(served):
+    _, client = served
+    sess = client.session("s")
+    sess.execute({"op": "bfs", "graph": "g", "params": {"source": 0}})
+    snap = client.metrics()
+    assert snap["service.requests"]["type"] == "counter"
+    assert snap["service.requests"]["value"] >= 1
+    assert snap["sched.engine_ms"]["type"] == "histogram"
+    assert snap["sched.engine_ms"]["count"] >= 1
+    txt = client.metrics_text()
+    assert "# TYPE repro_service_requests counter" in txt
+
+
+def test_chrome_trace_writes_local_file(served, tmp_path):
+    import json as _json
+    _, client = served
+    sess = client.session("s")
+    p = sess.submit({"op": "bfs", "graph": "g", "params": {"source": 0}})
+    p.result(60)
+    path = tmp_path / "remote_trace.json"
+    doc = client.chrome_trace(trace=p.trace, path=str(path))
+    assert _json.loads(path.read_text()) == doc
+    assert doc["traceEvents"]

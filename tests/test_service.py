@@ -816,3 +816,54 @@ def test_close_resolves_outstanding_requests():
     svc.close()
     for p in ps:
         assert p.result(timeout=30) is not None
+
+
+# ---------------------------------------------------------------------------
+# stats consistency under concurrent workers
+# ---------------------------------------------------------------------------
+
+
+def test_stats_counters_exact_under_two_workers():
+    """Hammer a worker-backed service from two threads: ``stats`` counters
+    are mutated from submitters, scheduler workers and drain callers — the
+    dedicated stats lock must make every increment land (no lost updates),
+    and the obs mirror must agree."""
+    from repro import obs
+
+    svc = make_service(workers=2)
+    n_per_thread = 200
+    obs_before = obs.counter("service.requests").value
+    errors = []
+
+    def hammer(tag):
+        s = svc.session(f"hammer-{tag}")
+        try:
+            for i in range(n_per_thread):
+                while True:
+                    try:
+                        p = s.submit({"op": "bfs", "graph": "g",
+                                      "params": {"source": i % 7}})
+                        break
+                    except RejectedError as e:
+                        time.sleep(min(e.retry_after, 0.005))
+                p.result(timeout=60)
+        except Exception as e:            # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in "ab"]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    svc.close()
+    assert not errors
+    total = 2 * n_per_thread
+    assert svc.stats["requests"] == total
+    assert obs.counter("service.requests").value - obs_before == total
+    # every request either hit the cache or reached the engine exactly once
+    served = (svc.stats["cache_hits"] + svc.stats["engine_calls"]
+              + svc.stats["fused_requests"] - svc.stats["fused_calls"]
+              + svc.stats["retained"])
+    assert svc.stats["cache_hits"] + svc.stats["cache_misses"] >= \
+        svc.stats["engine_calls"]
+    assert served >= svc.stats["engine_calls"]
