@@ -1,15 +1,17 @@
 """Bench regression delta: fresh BENCH_*.json vs the committed baseline.
 
 ``ci_check.sh`` snapshots the committed ``BENCH_engine.json`` /
-``BENCH_service.json`` before re-running the benchmarks, then calls this
-script to diff them.  **Only hardware-independent speedup ratios are
+``BENCH_service.json`` / ``BENCH_memory.json`` before re-running the
+benchmarks, then calls this script to diff them.  **Only hardware-independent speedup ratios are
 gated**; absolute numbers are printed for information but never fail:
 
 * gated — ``engine.bfs.speedup`` (frontier vs dense), ``engine.delta.
   plan_patch_speedup`` / ``warm_pagerank_speedup`` / ``bfs_reseed_speedup``
   (incremental vs from-scratch), ``service.speedup_fused`` /
-  ``speedup_fused_cached`` (vs sequential) and
-  ``service.overload.p99_improvement`` (fair vs fifo).  Each compares two
+  ``speedup_fused_cached`` (vs sequential),
+  ``service.overload.p99_improvement`` (fair vs fifo) and
+  ``memory.slowdown`` (budgeted vs unbounded, also capped absolutely at
+  1.5x).  Each compares two
   measurements from the *same run on the same machine*, so a
   differently-sized CI runner moves numerator and denominator together and
   the 30% bound means what it says.
@@ -42,12 +44,14 @@ import json
 import os
 import sys
 
-_FILES = ("BENCH_engine.json", "BENCH_service.json")
+_FILES = ("BENCH_engine.json", "BENCH_service.json", "BENCH_memory.json")
 
 #: absolute caps enforced on the *new* values regardless of any baseline:
 #: metric -> max allowed value.  Used for contracts that are absolute by
-#: nature (the observability subsystem promises <= 5% overhead).
-_ABS_MAX = {"service.obs_overhead.ratio": 1.05}
+#: nature (the observability subsystem promises <= 5% overhead; the memory
+#: budget promises <= 1.5x eviction overhead on the budgeted re-run).
+_ABS_MAX = {"service.obs_overhead.ratio": 1.05,
+            "memory.slowdown": 1.5}
 
 
 def _metrics(fname: str, data: dict) -> dict:
@@ -106,6 +110,26 @@ def _metrics(fname: str, data: dict) -> dict:
             # absolute <= 3x gate for it instead.
             out["service.remote.overhead_cached_p50"] = (
                 float(remote["overhead_cached_p50"]), "lower", False)
+    elif fname == "BENCH_memory.json":
+        if "slowdown" in data:
+            # eviction-overhead ratio: budgeted vs unbounded wall time of
+            # the same workload in the same run — hardware-independent, so
+            # both delta-gated and capped absolutely (_ABS_MAX, mirroring
+            # the ci_check.sh gate)
+            out["memory.slowdown"] = (float(data["slowdown"]), "lower", True)
+        if "rss_ratio" in data:
+            # same-run ratio but allocator-noise-dominated: info only,
+            # ci_check.sh holds the absolute <= 1.2x gate
+            out["memory.rss_ratio"] = (float(data["rss_ratio"]), "lower",
+                                       False)
+        for leg in ("unbounded", "budgeted"):
+            blk = data.get(leg) or {}
+            if "tracked_peak" in blk:
+                out[f"memory.{leg}.tracked_peak"] = (
+                    float(blk["tracked_peak"]), "lower", False)
+            if "qps" in blk:
+                out[f"memory.{leg}.qps"] = (float(blk["qps"]), "higher",
+                                            False)
     return out
 
 

@@ -33,7 +33,7 @@ fi
 # bench_delta.py diffs the fresh run against this baseline at the end.
 BASELINE_DIR="$(mktemp -d)"
 trap 'rm -rf "$BASELINE_DIR"' EXIT
-for f in BENCH_engine.json BENCH_service.json; do
+for f in BENCH_engine.json BENCH_service.json BENCH_memory.json; do
   [[ -f "$f" ]] && cp "$f" "$BASELINE_DIR/"
 done
 
@@ -103,6 +103,34 @@ assert obs["ratio"] <= 1.05, \
     f"(enabled {obs['enabled_median_s']}s, " \
     f"disabled {obs['disabled_median_s']}s)"
 print(f"obs gate OK: instrumentation overhead {obs['ratio']}x (<= 1.05x)")
+EOF
+# memory-budget gates (ISSUE 8): the fused+cached workload re-run under a
+# budget of 25% of its own unbounded tracked peak must stay inside the
+# budget at every sample, answer bit-identically, stay within 1.5x wall
+# time, and must not grow peak RSS — all same-run ratios except RSS, which
+# gets allocator-noise slack
+python benchmarks/bench_memory.py --out BENCH_memory.json
+python - <<'EOF'
+import json
+m = json.load(open("BENCH_memory.json"))
+b, u = m["budgeted"], m["unbounded"]
+assert m["within_budget"], \
+    f"memory gate: {b['over_budget_samples']}/{b['n_samples']} samples over " \
+    f"the {m['budget_bytes']} byte budget (peak {b['tracked_peak']})"
+assert m["bit_identical"], \
+    f"memory gate: budgeted results diverge from unbounded " \
+    f"({b['digest'][:12]} != {u['digest'][:12]})"
+assert m["slowdown"] <= 1.5, \
+    f"memory gate: budgeted run {m['slowdown']}x slower than unbounded " \
+    f"(> 1.5x; budgeted {b['wall_s']}s, unbounded {u['wall_s']}s)"
+assert m["rss_ratio"] <= 1.2, \
+    f"memory gate: budgeted peak RSS {m['rss_ratio']}x unbounded (> 1.2x; " \
+    f"bounding tracked bytes must not grow the footprint)"
+print(f"memory gate OK: budget {m['budget_bytes']/1e6:.2f}MB "
+      f"({int(m['budget_fraction']*100)}% of unbounded peak), "
+      f"bit-identical, slowdown {m['slowdown']}x, rss {m['rss_ratio']}x, "
+      f"evicted {b['stats']['evicted_results']} results + "
+      f"{b['stats']['evicted_plan_families']} plan families")
 EOF
 # regression delta: fresh ratios vs the committed baseline (>30% fails;
 # absolute ms/qps are machine-relative and reported info-only)

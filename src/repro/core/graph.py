@@ -469,6 +469,44 @@ class Graph:
             total += a.size * a.dtype.itemsize
         return int(total)
 
+    def plan_nbytes(self) -> int:
+        """Derived bytes held by this graph's plan (0 when the plan is cold)."""
+        return 0 if self._plan is None else int(self._plan.nbytes())
+
+    def lineage_depth(self) -> int:
+        """Length of the ``apply_delta`` ancestry chain hanging off this graph."""
+        depth, g = 0, self
+        while g._delta is not None:
+            depth += 1
+            g = g._delta.parent
+        return depth
+
+    def prune_lineage(self, max_depth: int) -> int:
+        """Cut the delta-ancestry chain ``max_depth`` links up; returns cuts.
+
+        Every ``apply_delta`` child strongly references its parent graph (and,
+        once its plan is built, the parent's plan) through ``_delta`` — a
+        long-lived delta stream would otherwise pin every ancestor forever.
+        Cutting clears the ancestor's ``_delta`` and its plan's
+        ``_parent``/``_info`` back-references, releasing everything deeper.
+        The cut ancestor (and anything that still reaches it) simply loses
+        delta-aware retention/warm-starts for *future* deltas and falls back
+        to cold recomputation — results are unaffected.
+        """
+        depth, g = 0, self
+        while g._delta is not None and depth < max_depth:
+            depth += 1
+            g = g._delta.parent
+        cuts = 0
+        if g._delta is not None:
+            g._delta = None
+            cuts += 1
+        if g._plan is not None and getattr(g._plan, "_parent", None) is not None:
+            g._plan._parent = None
+            g._plan._info = None
+            cuts += 1
+        return cuts
+
     def __repr__(self) -> str:  # pragma: no cover
         return f"Graph({self.n_nodes} nodes, {self.n_edges} edges)"
 

@@ -53,7 +53,49 @@ import numpy as np
 from .graph import EdgeDelta, Graph
 from ..kernels.segment_sum import DEFAULT_BLOCK, DEFAULT_CHUNK, chunk_layout
 
-__all__ = ["GraphPlan"]
+__all__ = ["GraphPlan", "EVICTABLE_FAMILIES"]
+
+# Derived-array families a plan can drop and rebuild on next touch.  "base"
+# (the eager sorted-edge/degree arrays) and the graph's own CSR storage are
+# deliberately absent: they are the plan, not a cache over it.
+EVICTABLE_FAMILIES: Tuple[str, ...] = (
+    "undirected", "oriented", "csr", "perm", "bsr", "tri", "chunks", "execs")
+
+
+def _tree_bytes(obj, seen: set) -> int:
+    """Sum array bytes in a nested structure, counting each buffer once.
+
+    ``seen`` carries the ids of buffers already charged elsewhere (the
+    graph's own CSR storage, the parent plan's arrays a patched member
+    shares) so aliased members — ``csr_out()`` returning ``g.out_idx``, a
+    patched BSR sharing the parent's ``rows``/``cols``, exec pytrees holding
+    references into plan arrays — never double-count.
+    """
+    if obj is None:
+        return 0
+    if isinstance(obj, (tuple, list)):
+        return sum(_tree_bytes(x, seen) for x in obj)
+    if isinstance(obj, dict):
+        return sum(_tree_bytes(x, seen) for x in obj.values())
+    if isinstance(obj, Graph):
+        total = _tree_bytes((obj.node_ids, obj.out_ptr, obj.out_idx,
+                             obj.in_ptr, obj.in_idx), seen)
+        if obj._plan is not None:
+            total += sum(obj._plan.nbytes_by_family().values())
+        return total
+    if hasattr(obj, "dtype") and hasattr(obj, "size"):
+        k = id(obj)
+        if k in seen:
+            return 0
+        seen.add(k)
+        return int(obj.size) * int(np.dtype(obj.dtype).itemsize)
+    try:                               # exec pytrees and anything jax knows
+        leaves = jax.tree_util.tree_leaves(obj)
+    except Exception:
+        return 0
+    if len(leaves) == 1 and leaves[0] is obj:
+        return 0                       # opaque scalar leaf, not a container
+    return sum(_tree_bytes(x, seen) for x in leaves)
 
 
 @dataclass
@@ -348,6 +390,114 @@ class GraphPlan:
             self._chunks_out[chunk] = _device_layout(
                 chunk_layout(np.asarray(self.out_src), self.n_nodes, chunk))
         return self._chunks_out[chunk]
+
+    # -- byte accounting + eviction ----------------------------------------------
+    def _families(self) -> Dict[str, object]:
+        """Family name -> the cached member(s) it covers (None/{} = cold)."""
+        return {
+            "base": (self.in_src, self.in_dst, self.out_src, self.out_dst,
+                     self.out_deg, self.in_deg, self.inv_out_deg,
+                     self.dangling),
+            "undirected": self._undirected,
+            "oriented": self._oriented,
+            "csr": (self._csr_out, self._csr_in),
+            "perm": self._in_perm_out,
+            "bsr": (self._bsr, self._bsr_t),
+            "tri": self._tri_triples,
+            "chunks": (self._chunks_in, self._chunks_out),
+            "execs": self.execs,
+            "lineage": self._info,
+        }
+
+    def _shared_ids(self) -> set:
+        """Buffer ids charged to someone else: the graph's CSR storage and —
+        for a patched plan — everything the parent plan already owns."""
+        g = self.graph
+        seen = {id(a) for a in (g.node_ids, g.out_ptr, g.out_idx,
+                                g.in_ptr, g.in_idx)}
+        parent = self._parent
+        if parent is not None:
+            sink: set = set()
+            for member in parent._families().values():
+                _tree_bytes(member, sink)
+            seen |= sink
+            pg = parent.graph
+            seen |= {id(a) for a in (pg.node_ids, pg.out_ptr, pg.out_idx,
+                                     pg.in_ptr, pg.in_idx)}
+        return seen
+
+    def nbytes_by_family(self) -> Dict[str, int]:
+        """Derived bytes this plan holds, per family, aliases excluded.
+
+        ``base`` is the eager sorted-edge/degree arrays (never evictable —
+        they *are* the plan); ``lineage`` the host-side ``_DeltaInfo`` merge
+        arrays a patched plan keeps for retention/warm starts.  Families in
+        :data:`EVICTABLE_FAMILIES` can be dropped via :meth:`evict` and
+        re-derive bit-identically on next touch.
+        """
+        seen = self._shared_ids()
+        out: Dict[str, int] = {}
+        for name, member in self._families().items():
+            if name == "lineage":
+                info = member
+                out[name] = 0 if info is None else sum(
+                    a.nbytes for a in (info.add_src, info.add_dst,
+                                       info.del_src, info.del_dst, info.dirty,
+                                       info.out_src, info.out_dst,
+                                       info.in_src, info.in_dst))
+            else:
+                out[name] = _tree_bytes(member, seen)
+        return out
+
+    def nbytes(self) -> int:
+        """Total derived bytes held by this plan (aliases excluded)."""
+        return sum(self.nbytes_by_family().values())
+
+    def evictable_bytes(self) -> int:
+        fams = self.nbytes_by_family()
+        return sum(fams[f] for f in EVICTABLE_FAMILIES)
+
+    def evict(self, family: str) -> int:
+        """Drop one re-derivable family; returns the bytes it held.
+
+        Transparent by construction: every lazy getter rebuilds from the
+        graph/base arrays (deterministically, so results are bit-identical),
+        and evicting any array family also clears the cached ``Exec``
+        pytrees, whose leaves reference the evicted buffers and would
+        otherwise keep them alive.
+        """
+        if family not in EVICTABLE_FAMILIES:
+            raise ValueError(f"family {family!r} is not evictable; "
+                             f"have {EVICTABLE_FAMILIES}")
+        fams = self.nbytes_by_family()
+        freed = fams[family]
+        if family == "undirected":
+            self._undirected = None
+        elif family == "oriented":
+            self._oriented = None
+        elif family == "csr":
+            self._csr_out = None
+            self._csr_in = None
+        elif family == "perm":
+            self._in_perm_out = None
+        elif family == "bsr":
+            self._bsr = {}
+            self._bsr_t = {}
+        elif family == "tri":
+            self._tri_triples = {}
+        elif family == "chunks":
+            self._chunks_in = {}
+            self._chunks_out = {}
+        if family != "execs" and self.execs:
+            freed += fams["execs"]
+            self.execs = {}
+        elif family == "execs":
+            self.execs = {}
+        return freed
+
+    def evict_all(self) -> int:
+        """Drop every re-derivable family; returns total bytes freed."""
+        return sum(self.evict(f) for f in EVICTABLE_FAMILIES)
 
 
 def _host_in_perm_out(info) -> Optional[np.ndarray]:

@@ -65,6 +65,8 @@ __all__ = [
     "export_script",
     "replay",
     "register_op",
+    "set_pin_capacity",
+    "pin_stats",
 ]
 
 
@@ -131,6 +133,11 @@ _BY_VERSION: Dict[str, Any] = {}
 _PINNED = object()  # marker: object lives in _STRONG_RING
 _STRONG_RING: "OrderedDict[int, Any]" = OrderedDict()
 _STRONG_CAP = 4096
+# pinned-object id -> version tokens bound to it: ring eviction must also
+# drop the _BY_VERSION entries, which hold the object strongly (a pinned
+# binding has no weakref death callback — without this reverse map every
+# evicted pin leaked its object through _BY_VERSION forever)
+_PIN_TOKENS: Dict[int, List[str]] = {}
 
 
 def _try_setattr(obj: Any, name: str, value: Any) -> bool:
@@ -141,17 +148,59 @@ def _try_setattr(obj: Any, name: str, value: Any) -> bool:
         return False
 
 
+def _evict_pin_locked(key: int) -> None:
+    """Drop every side-table and registry entry of an evicted pinned id."""
+    _SIDE_VERSIONS.pop(key, None)
+    _SIDE_RECORDS.pop(key, None)
+    obj = _STRONG_RING.pop(key, None)
+    for tok in _PIN_TOKENS.pop(key, ()):
+        cur = _BY_VERSION.get(tok)
+        if isinstance(cur, tuple) and cur[0] is _PINNED and cur[1] is obj:
+            del _BY_VERSION[tok]
+
+
 def _side_put(store: Dict[int, Any], obj: Any, value: Any) -> None:
     key = id(obj)
-    store[key] = value
-    try:
-        weakref.finalize(obj, store.pop, key, None)
-    except TypeError:
-        # no weakref support: pin the object so its id cannot be reused
-        _STRONG_RING[key] = obj
+    with _LOCK:
+        store[key] = value
+        try:
+            weakref.finalize(obj, store.pop, key, None)
+        except TypeError:
+            # no weakref support: pin the object so its id cannot be reused
+            _STRONG_RING[key] = obj
+            _STRONG_RING.move_to_end(key)
+            while len(_STRONG_RING) > _STRONG_CAP:
+                old_key = next(iter(_STRONG_RING))
+                if old_key == key:
+                    break              # never evict the entry being added
+                _evict_pin_locked(old_key)
+
+
+def set_pin_capacity(n: int) -> None:
+    """Bound the strong-pin ring (weakref-less provenance subjects) to ``n``.
+
+    Shrinking evicts oldest pins immediately — their versions/records are
+    forgotten, exactly as if the objects had been garbage collected.
+    """
+    global _STRONG_CAP
+    if n < 1:
+        raise ValueError(f"pin capacity must be >= 1, got {n}")
+    with _LOCK:
+        _STRONG_CAP = int(n)
         while len(_STRONG_RING) > _STRONG_CAP:
-            old_key, _ = _STRONG_RING.popitem(last=False)
-            store.pop(old_key, None)
+            _evict_pin_locked(next(iter(_STRONG_RING)))
+
+
+def pin_stats() -> Dict[str, int]:
+    """Accounting for the strong-pin ring: count, capacity and bytes held
+    (array-typed pins charge ``size * itemsize``; others charge 0)."""
+    with _LOCK:
+        nbytes = 0
+        for obj in _STRONG_RING.values():
+            if hasattr(obj, "dtype") and hasattr(obj, "size"):
+                nbytes += int(obj.size) * int(np.dtype(obj.dtype).itemsize)
+        return {"pinned": len(_STRONG_RING), "capacity": _STRONG_CAP,
+                "bytes": nbytes}
 
 
 def _kind_prefix(obj: Any) -> str:
@@ -214,8 +263,10 @@ def _register_locked(obj: Any, v: str) -> None:
                                      lambda r, v=v: _pop_version_if(v, r))
     except TypeError:
         # no weakref support: the object is either attr-carrying (rare)
-        # or already pinned in the strong ring by _side_put
+        # or already pinned in the strong ring by _side_put; remember the
+        # token so ring eviction can drop this strong binding too
         _BY_VERSION[v] = (_PINNED, obj)
+        _PIN_TOKENS.setdefault(id(obj), []).append(v)
 
 
 def peek_version(obj: Any) -> Optional[str]:

@@ -35,14 +35,15 @@ import os
 from typing import Any, Dict, Optional, Union
 
 from .log import StructLogger, format_event, get_logger
-from .metrics import (COUNT_BUCKETS, DEFAULT_BUCKETS_MS, Counter, Gauge,
-                      Histogram, Registry, quantile_from_snapshot)
+from .metrics import (BYTE_BUCKETS, COUNT_BUCKETS, DEFAULT_BUCKETS_MS,
+                      Counter, Gauge, Histogram, Registry,
+                      quantile_from_snapshot)
 from .trace import NOOP_SPAN, Span, Tracer
 
 __all__ = [
     "REGISTRY", "TRACER", "Registry", "Tracer", "Span", "NOOP_SPAN",
     "Counter", "Gauge", "Histogram", "StructLogger",
-    "DEFAULT_BUCKETS_MS", "COUNT_BUCKETS",
+    "DEFAULT_BUCKETS_MS", "COUNT_BUCKETS", "BYTE_BUCKETS",
     "enable", "disable", "enabled",
     "counter", "gauge", "histogram", "quantile_from_snapshot",
     "span", "instant", "add_complete", "new_trace_id", "current_trace",

@@ -30,7 +30,8 @@ from bisect import bisect_left
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Type
 
 __all__ = ["Registry", "Counter", "Gauge", "Histogram",
-           "DEFAULT_BUCKETS_MS", "COUNT_BUCKETS", "quantile_from_snapshot"]
+           "DEFAULT_BUCKETS_MS", "COUNT_BUCKETS", "BYTE_BUCKETS",
+           "quantile_from_snapshot"]
 
 # latency-ish buckets (milliseconds): sub-0.1ms cache hits up to multi-second
 # cold engine calls
@@ -42,6 +43,12 @@ DEFAULT_BUCKETS_MS: Tuple[float, ...] = (
 # solver iteration counts
 COUNT_BUCKETS: Tuple[float, ...] = tuple(
     float(1 << i) for i in range(0, 21))
+
+# byte-size buckets (powers of four, 64 B .. 1 GiB): result-cache entry and
+# plan-family sizes span five orders of magnitude, so quarter-decade steps
+# keep the histogram small without flattening the distribution
+BYTE_BUCKETS: Tuple[float, ...] = tuple(
+    float(1 << i) for i in range(6, 31, 2))
 
 
 class Counter:

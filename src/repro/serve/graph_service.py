@@ -58,7 +58,8 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict
+import weakref
+from collections import OrderedDict, deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -71,16 +72,28 @@ from ..core import convert as C
 from ..core import provenance as prov
 from ..core import relational as R
 from ..core.graph import EdgeDelta, Graph
+from ..core.plan import EVICTABLE_FAMILIES
 from ..core.table import Table
-from .policy import (DeadlineExpired, RejectedError, SchedulerPolicy,
-                     ServiceError)
+from .policy import (DeadlineExpired, MemoryPolicy, RejectedError,
+                     SchedulerPolicy, ServiceError)
 from .scheduler import QueuedRequest, Scheduler
 
 __all__ = ["Workspace", "Session", "GraphService", "Pending", "EdgeDelta",
            "ServiceError", "RejectedError", "DeadlineExpired",
-           "SchedulerPolicy"]
+           "SchedulerPolicy", "MemoryPolicy"]
 
 _log = obs.get_logger(__name__)
+
+# memory telemetry: what the serving process is holding, and for whom.
+# Gauges are set by the memory manager on every accounting pass; they flow
+# to remote clients through the existing ``metrics`` RPC unchanged.
+_G_PLAN_BYTES = obs.gauge("mem.plan_bytes")
+_G_PLAN_EVICTABLE = obs.gauge("mem.plan_evictable_bytes")
+_G_CACHE_BYTES = obs.gauge("mem.result_cache_bytes")
+_G_TRACKED = obs.gauge("mem.tracked_bytes")
+_G_BUDGET = obs.gauge("mem.budget_bytes")
+_G_PINS = obs.gauge("mem.provenance_pins")
+_H_ENTRY_BYTES = obs.histogram("mem.entry_bytes", buckets=obs.BYTE_BUCKETS)
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +247,215 @@ def _block(out: Any) -> Any:
         return jax.block_until_ready(out)
     except Exception:
         return out
+
+
+# ---------------------------------------------------------------------------
+# memory accounting — byte-costed result cache + plan-member eviction
+# ---------------------------------------------------------------------------
+
+#: flat per-entry charge covering the key tuple, OrderedDict slot and cost
+#: map; keeps zero-byte payloads (scalars, empty tables) from being free
+_ENTRY_OVERHEAD = 512
+
+
+def _payload_bytes(v: Any) -> int:
+    """Array bytes held by a cached result value (0 for scalars)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return 0
+    if isinstance(v, (Graph, Table)):
+        return int(v.nbytes())
+    if hasattr(v, "dtype") and hasattr(v, "size"):
+        return int(v.size) * int(np.dtype(v.dtype).itemsize)
+    if isinstance(v, (tuple, list)):
+        return sum(_payload_bytes(x) for x in v)
+    if isinstance(v, dict):
+        return sum(_payload_bytes(x) for x in v.values())
+    return 0
+
+
+def _value_nbytes(v: Any) -> int:
+    return _ENTRY_OVERHEAD + _payload_bytes(v)
+
+
+class _MemoryManager:
+    """Keeps the service's tracked bytes under :class:`MemoryPolicy`'s budget.
+
+    Tracked bytes = result-cache bytes + the re-derivable plan families of
+    every live graph the service has served.  Eviction order is fixed:
+    result-cache entries first (LRU — recomputing is the ordinary miss
+    path), then plan families of graphs with no in-flight batch, largest
+    first (re-deriving is cheaper than an engine call but not free).  The
+    base CSR of a live graph and the plan's eager arrays are never touched.
+
+    Lock order (outermost → innermost): ``self._lock`` → the service's
+    ``_lock`` → ``_stats_lock``.  Nothing may call into this class while
+    holding the service lock.
+    """
+
+    def __init__(self, service: "GraphService", policy: MemoryPolicy):
+        self.service = service
+        self.policy = policy
+        self._lock = threading.RLock()
+        # id(graph) -> weakref; a graph that dies simply drops out of
+        # accounting (its plan died with it)
+        self._graphs: Dict[int, Any] = {}
+        # id(graph) -> in-flight batch refcount; a busy graph's plan members
+        # are mid-use by an engine call and are skipped by eviction
+        self._busy: Dict[int, int] = {}
+        # test/debug probe: recent eviction actions ("result"|"plan", bytes)
+        self.evlog: "deque" = deque(maxlen=256)
+
+    # -- graph registry -----------------------------------------------------
+    def _drop(self, key: int) -> None:
+        with self._lock:
+            self._graphs.pop(key, None)
+            self._busy.pop(key, None)
+
+    def note_graph(self, g: Graph) -> None:
+        key = id(g)
+        with self._lock:
+            if key not in self._graphs:
+                self._graphs[key] = weakref.ref(
+                    g, lambda r, key=key: self._drop(key))
+
+    def _live_graphs_locked(self) -> List[Graph]:
+        out = []
+        for key, ref in list(self._graphs.items()):
+            g = ref()
+            if g is None:
+                self._graphs.pop(key, None)
+                self._busy.pop(key, None)
+            else:
+                out.append(g)
+        return out
+
+    # -- in-flight pinning (scheduler brackets every engine call) -----------
+    def begin_group(self, graphs: List[Graph]) -> None:
+        with self._lock:
+            for g in graphs:
+                key = id(g)
+                self._busy[key] = self._busy.get(key, 0) + 1
+
+    def end_group(self, graphs: List[Graph]) -> None:
+        with self._lock:
+            for g in graphs:
+                key = id(g)
+                n = self._busy.get(key, 0) - 1
+                if n <= 0:
+                    self._busy.pop(key, None)
+                else:
+                    self._busy[key] = n
+        self.maybe_evict()
+
+    # -- accounting ---------------------------------------------------------
+    def _plan_totals_locked(self) -> Tuple[int, int, List[Tuple[int, str, Any]]]:
+        """(total plan bytes, evictable plan bytes, evictable candidates).
+
+        Candidates — ``(bytes, family, plan)`` — cover only graphs with no
+        in-flight batch; busy graphs' evictable bytes still count toward the
+        total (they are tracked, just momentarily unevictable).
+        """
+        total = evictable = 0
+        candidates: List[Tuple[int, str, Any]] = []
+        for g in self._live_graphs_locked():
+            p = g._plan
+            if p is None:
+                continue
+            fams = p.nbytes_by_family()
+            total += sum(fams.values())
+            busy = self._busy.get(id(g), 0) > 0
+            for f in EVICTABLE_FAMILIES:
+                b = fams[f]
+                evictable += b
+                if b > 0 and not busy:
+                    candidates.append((b, f, p))
+        return total, evictable, candidates
+
+    def _prune_lineage_locked(self) -> None:
+        cuts = 0
+        for g in self._live_graphs_locked():
+            cuts += g.prune_lineage(self.policy.max_lineage_depth)
+        if cuts:
+            self.service._bump("lineage_cuts", cuts)
+
+    def tracked_bytes(self) -> int:
+        with self._lock:
+            _, evictable, _ = self._plan_totals_locked()
+            with self.service._lock:
+                return self.service._cache_bytes + evictable
+
+    def on_cache_change(self) -> None:
+        """Cheap hook after every ``_cache_put``: O(1) gauge refresh when
+        unbudgeted, full eviction pass when a budget is set (a retention put
+        at submit time can push past the budget between engine calls)."""
+        if self.policy.budget_bytes is None:
+            with self.service._lock:
+                _G_CACHE_BYTES.set(self.service._cache_bytes)
+            return
+        self.maybe_evict()
+
+    def maybe_evict(self) -> None:
+        """One full accounting pass: prune lineage, evict to budget, gauge."""
+        svc = self.service
+        with self._lock:
+            self._prune_lineage_locked()
+            budget = self.policy.budget_bytes
+            plan_total, plan_ev, candidates = self._plan_totals_locked()
+            n_results = n_plans = freed = 0
+            if budget is not None:
+                # 1) result cache, LRU order — cheapest to restore
+                with svc._lock:
+                    while svc._cache_bytes + plan_ev > budget and svc._cache:
+                        key, _ = svc._cache.popitem(last=False)
+                        cost = svc._cache_cost.pop(key, 0)
+                        svc._cache_bytes -= cost
+                        n_results += 1
+                        freed += cost
+                        self.evlog.append(("result", cost))
+                    cache_bytes = svc._cache_bytes
+                # 2) plan families of idle graphs, largest first
+                if cache_bytes + plan_ev > budget:
+                    for b, fam, p in sorted(candidates, key=lambda c: -c[0]):
+                        if cache_bytes + plan_ev <= budget:
+                            break
+                        got = p.evict(fam)
+                        plan_ev = max(plan_ev - got, 0)
+                        plan_total = max(plan_total - got, 0)
+                        n_plans += 1
+                        freed += got
+                        self.evlog.append(("plan", got))
+            with svc._lock:
+                cache_bytes = svc._cache_bytes
+            _G_PLAN_BYTES.set(plan_total)
+            _G_PLAN_EVICTABLE.set(plan_ev)
+            _G_CACHE_BYTES.set(cache_bytes)
+            _G_TRACKED.set(cache_bytes + plan_ev)
+            _G_BUDGET.set(0 if budget is None else budget)
+            _G_PINS.set(prov.pin_stats()["pinned"])
+        if n_results:
+            svc._bump("evicted_results", n_results)
+        if n_plans:
+            svc._bump("evicted_plan_families", n_plans)
+        if freed:
+            svc._bump("evicted_bytes", freed)
+
+    def stats(self) -> Dict[str, int]:
+        """Point-in-time memory accounting (also the session_stats payload)."""
+        with self._lock:
+            plan_total, plan_ev, _ = self._plan_totals_locked()
+            with self.service._lock:
+                cache_bytes = self.service._cache_bytes
+                entries = len(self.service._cache)
+        pins = prov.pin_stats()
+        budget = self.policy.budget_bytes
+        return {"tracked_bytes": cache_bytes + plan_ev,
+                "budget_bytes": 0 if budget is None else int(budget),
+                "result_cache_bytes": cache_bytes,
+                "result_cache_entries": entries,
+                "plan_bytes": plan_total,
+                "plan_evictable_bytes": plan_ev,
+                "provenance_pins": pins["pinned"],
+                "provenance_pin_bytes": pins["bytes"]}
 
 
 # ---------------------------------------------------------------------------
@@ -510,6 +732,7 @@ class GraphService:
                  fuse: bool = True, cache: bool = True, incremental: bool = True,
                  max_cache_entries: int = 1024,
                  policy: Optional[SchedulerPolicy] = None,
+                 memory: Optional[MemoryPolicy] = None,
                  workers: int = 0):
         self.workspace = workspace if workspace is not None else Workspace()
         self.fuse = fuse
@@ -520,6 +743,8 @@ class GraphService:
         # cold-only behavior, e.g. for differential testing)
         self.incremental = incremental
         self._cache: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._cache_cost: Dict[Tuple, int] = {}
+        self._cache_bytes = 0
         self._max_cache = max_cache_entries
         self._lock = threading.RLock()
         self._sessions: Dict[str, Session] = {}
@@ -529,7 +754,9 @@ class GraphService:
                       "fused_calls": 0, "fused_requests": 0,
                       "engine_calls": 0, "rejected": 0, "expired": 0,
                       "batch_windows": 0, "retained": 0, "warm_starts": 0,
-                      "incremental_fallbacks": 0}
+                      "incremental_fallbacks": 0,
+                      "evicted_results": 0, "evicted_plan_families": 0,
+                      "evicted_bytes": 0, "lineage_cuts": 0}
         # dedicated innermost lock for the ``stats`` dict: it is bumped from
         # submitters (under self._lock), scheduler workers (under the
         # scheduler's lock) and drain callers — a bare ``+=`` under two
@@ -537,6 +764,11 @@ class GraphService:
         # goes through _bump; nothing else is ever taken while holding it.
         self._stats_lock = threading.Lock()
         self.policy = policy if policy is not None else SchedulerPolicy()
+        # memory budget: explicit ``memory=`` beats the policy's; the pin
+        # ring is process-global, so the most recent service's cap applies
+        self.memory = memory if memory is not None else self.policy.memory
+        prov.set_pin_capacity(self.memory.max_provenance_pins)
+        self._mem = _MemoryManager(self, self.memory)
         self.scheduler = Scheduler(self, self.policy)
         self._stop = threading.Event()
         self._worker_threads: List[threading.Thread] = []
@@ -589,6 +821,9 @@ class GraphService:
             out.update(c if c is not None
                        else {"cache_hits": 0, "cache_misses": 0,
                              "retained": 0})
+        # service-wide memory accounting (same for every session): what the
+        # server is holding on clients' behalf, visible over the wire
+        out.update({f"mem_{k}": v for k, v in self._mem.stats().items()})
         return out
 
     def end_session(self, name: str) -> None:
@@ -706,12 +941,29 @@ class GraphService:
         return None, False
 
     def _cache_put(self, key: Optional[Tuple], value: Any) -> None:
+        """Insert under byte accounting; evict LRU-first past any bound.
+
+        Every entry carries its byte cost (payload arrays + a flat
+        overhead); the running total feeds the memory manager, which brings
+        tracked bytes back under :class:`MemoryPolicy`'s budget after the
+        insert — result entries before plan members, never mid-batch.
+        """
         if key is None:
             return
+        cost = _value_nbytes(value)
+        _H_ENTRY_BYTES.observe(cost)
         with self._lock:
+            old = self._cache_cost.pop(key, None)
+            if old is not None:
+                self._cache_bytes -= old
             self._cache[key] = value
+            self._cache.move_to_end(key)
+            self._cache_cost[key] = cost
+            self._cache_bytes += cost
             while len(self._cache) > self._max_cache:
-                self._cache.popitem(last=False)
+                k, _ = self._cache.popitem(last=False)
+                self._cache_bytes -= self._cache_cost.pop(k, 0)
+        self._mem.on_cache_change()
 
     # -- preparation (submit-time resolution) -------------------------------
     def _prepare(self, p: Pending) -> Optional[QueuedRequest]:
@@ -732,6 +984,9 @@ class GraphService:
         except Exception as e:
             p._resolve(error=e)
             return None
+        for _, o in inputs:
+            if isinstance(o, Graph):
+                self._mem.note_graph(o)
         payload: Dict[str, Any] = {"inputs": inputs, "params": params}
         fuse_key = None
         src_param = _FUSABLE.get(op)
@@ -761,6 +1016,34 @@ class GraphService:
                              payload=payload, deadline=deadline)
 
     # -- scheduler callbacks ------------------------------------------------
+    @staticmethod
+    def _group_graphs(group: List[QueuedRequest]) -> List[Graph]:
+        """Distinct input graphs an engine call for ``group`` will touch."""
+        out: List[Graph] = []
+        seen: set = set()
+        for q in group:
+            for o in ([q.payload.get("graph")]
+                      + [x for _, x in q.payload.get("inputs", ())]):
+                if isinstance(o, Graph) and id(o) not in seen:
+                    seen.add(id(o))
+                    out.append(o)
+        return out
+
+    def _mem_begin(self, group: List[QueuedRequest]) -> None:
+        """Scheduler bracket: pin the group's graphs against plan eviction
+        for the duration of the engine call (eviction must never race an
+        in-flight batch's plan arrays)."""
+        self._mem.begin_group(self._group_graphs(group))
+
+    def _mem_end(self, group: List[QueuedRequest]) -> None:
+        """Unpin + run an accounting/eviction pass (plans likely grew)."""
+        self._mem.end_group(self._group_graphs(group))
+
+    def memory_stats(self) -> Dict[str, int]:
+        """Tracked-bytes accounting: budget, result cache, plan families,
+        provenance pins.  Flat scalars — ships over the wire unchanged."""
+        return self._mem.stats()
+
     def _cache_lookup(self, q: QueuedRequest) -> Tuple[Any, bool]:
         self._try_retain(q)
         return self._cache_get(q.cache_key, session=q.session)

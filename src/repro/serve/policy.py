@@ -45,6 +45,7 @@ __all__ = [
     "AdmissionPolicy",
     "FairSharePolicy",
     "BatchPolicy",
+    "MemoryPolicy",
     "SchedulerPolicy",
 ]
 
@@ -199,6 +200,48 @@ class BatchPolicy:
 
 
 @dataclass
+class MemoryPolicy:
+    """Byte budget + eviction knobs for a long-lived serving process.
+
+    The budget governs the service's *tracked* bytes: the result cache plus
+    the re-derivable plan families of every live graph the service has
+    served (see ``GraphPlan.nbytes_by_family``).  When tracked bytes exceed
+    ``budget_bytes`` the service evicts, cheapest-to-restore first:
+
+    1. **result-cache entries**, LRU order — recomputing a query is the
+       ordinary cache-miss path and costs one engine call;
+    2. **plan families** of graphs with no in-flight batch, largest first —
+       re-deriving sorted/blocked arrays is cheaper than an engine call but
+       dearer than nothing, so these go only when the result cache alone
+       cannot get under budget.
+
+    The base CSR of a live graph (and the plan's eager sorted-edge arrays)
+    is never evicted: it is the object the workspace serves, not a cache.
+    """
+
+    #: tracked-bytes ceiling (result cache + evictable plan members);
+    #: None = unbounded, the pre-budget behavior
+    budget_bytes: Optional[int] = None
+    #: delta-ancestry links kept per live graph for retention/warm starts;
+    #: ancestors beyond this are cut so a delta stream cannot pin every
+    #: historical graph version (see ``Graph.prune_lineage``)
+    max_lineage_depth: int = 4
+    #: capacity of the provenance strong-pin ring for weakref-less objects
+    max_provenance_pins: int = 4096
+
+    def __post_init__(self):
+        if self.budget_bytes is not None and self.budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0 or None, "
+                             f"got {self.budget_bytes}")
+        if self.max_lineage_depth < 1:
+            raise ValueError(f"max_lineage_depth must be >= 1, "
+                             f"got {self.max_lineage_depth}")
+        if self.max_provenance_pins < 1:
+            raise ValueError(f"max_provenance_pins must be >= 1, "
+                             f"got {self.max_provenance_pins}")
+
+
+@dataclass
 class SchedulerPolicy:
     """Everything the request scheduler needs to make its decisions."""
 
@@ -208,6 +251,7 @@ class SchedulerPolicy:
     admission: AdmissionPolicy = field(default_factory=AdmissionPolicy)
     fair: FairSharePolicy = field(default_factory=FairSharePolicy)
     batch: BatchPolicy = field(default_factory=BatchPolicy)
+    memory: MemoryPolicy = field(default_factory=MemoryPolicy)
     #: deadline applied to requests that don't carry their own
     #: ``"deadline_ms"``; None = requests never expire by default
     default_deadline_ms: Optional[float] = None

@@ -414,6 +414,11 @@ class Scheduler:
             op=q.op, batch=len(group),
             sessions=sorted({m.session for m in group}),
             deficit_ms=deficit_ms)
+        # memory-manager bracket: the group's graphs are pinned against plan
+        # eviction while the engine call is in flight (an evicted member
+        # re-derives transparently, but never out from under a running
+        # batch); the end hook runs the accounting/eviction pass.
+        self.service._mem_begin(group)
         try:
             with sp:
                 engine_ms = self.service._run_group(group)
@@ -423,6 +428,8 @@ class Scheduler:
             for m in group:
                 if not m.pending.done:
                     m.pending._resolve(error=e)
+        finally:
+            self.service._mem_end(group)
         _H_ENGINE.observe(engine_ms)
         for m in group:
             self._done(m, engine_ms / max(len(group), 1))
