@@ -24,6 +24,9 @@ at a reduced scale (recorded in the JSON) to keep the smoke run fast.
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -178,6 +181,78 @@ def bench_delta(scale: int, edge_factor: int, repeats: int,
             "bfs_reseed_speedup": round(cold_bfs_ms / warm_bfs_ms, 3)}
 
 
+def bench_sharded(scale: int, edge_factor: int, n_iter: int, repeats: int,
+                  n_shards: int) -> dict:
+    """PageRank + BFS through the ``"sharded"`` backend at one shard count.
+
+    Needs ``len(jax.devices()) >= n_shards`` — the device count is fixed at
+    the first jax import, so the multi-device leg is spawned as a subprocess
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` when the
+    ambient session is smaller (see ``_sharded_leg``).  Also records the
+    halo-exchange volume per round, the hardware-independent number that
+    tells you what a real multi-host mesh would put on the wire.
+    """
+    os.environ["REPRO_SHARD_COUNT"] = str(n_shards)
+    try:
+        src, dst = rmat_edges(scale, edge_factor=edge_factor, seed=0)
+        g = Graph.from_edges(src, dst)
+        plan = g.plan()
+        _sync_plan(plan)
+        t0 = time.perf_counter()
+        sp = plan.sharded(n_shards)
+        jax.block_until_ready((sp.pull.gather_idx, sp.push.gather_idx))
+        shard_plan_ms = (time.perf_counter() - t0) * 1e3
+
+        def best(fn):
+            fn()                                 # trace/compile warm-up
+            b = float("inf")
+            for _ in range(repeats):
+                t1 = time.perf_counter()
+                fn()
+                b = min(b, (time.perf_counter() - t1) * 1e3)
+            return b
+
+        pr_ms = best(lambda: A.pagerank(g, n_iter=n_iter,
+                                        backend="sharded").block_until_ready())
+        source = int(np.argmax(np.asarray(plan.out_deg)))
+        bfs_ms = best(lambda: A.bfs(g, source,
+                                    backend="sharded").block_until_ready())
+        # the leg is only worth timing if it honours the bitwise contract
+        np.testing.assert_array_equal(
+            np.asarray(A.pagerank(g, n_iter=n_iter, backend="sharded")),
+            np.asarray(A.pagerank(g, n_iter=n_iter, backend="xla")))
+        return {"devices": n_shards, "scale": scale, "n_nodes": g.n_nodes,
+                "n_edges": g.n_edges, "n_iter": n_iter,
+                "shard_plan_build_ms": round(shard_plan_ms, 3),
+                "pagerank_ms": round(pr_ms, 3), "bfs_ms": round(bfs_ms, 3),
+                "halo_bytes_per_round": int(sp.halo_bytes_per_round())}
+    finally:
+        os.environ.pop("REPRO_SHARD_COUNT", None)
+
+
+def _sharded_leg(n_shards: int, args) -> dict:
+    """Run one sharded leg, in-process when the devices exist, else in a
+    subprocess that raises the simulated host device count first."""
+    if len(jax.devices()) >= n_shards:
+        return bench_sharded(args.bfs_scale, args.edge_factor, args.n_iter,
+                             args.repeats, n_shards)
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_shards}")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--sharded-leg", str(n_shards), "--scale", str(args.scale),
+         "--bfs-scale", str(args.bfs_scale),
+         "--edge-factor", str(args.edge_factor),
+         "--n-iter", str(args.n_iter), "--repeats", str(args.repeats)],
+        capture_output=True, text=True, timeout=1800, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded leg d={n_shards} failed:\n"
+                           f"{proc.stdout}\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--scale", type=int, default=16,
@@ -190,7 +265,17 @@ def main():
     p.add_argument("--n-iter", type=int, default=10)
     p.add_argument("--repeats", type=int, default=3)
     p.add_argument("--out", default="BENCH_engine.json")
+    p.add_argument("--sharded-leg", type=int, default=0,
+                   help="internal: run ONE sharded leg at this shard count "
+                        "and print its JSON block (used by the subprocess "
+                        "re-entry that raises the simulated device count)")
     args = p.parse_args()
+
+    if args.sharded_leg:
+        print(json.dumps(bench_sharded(args.bfs_scale, args.edge_factor,
+                                       args.n_iter, args.repeats,
+                                       args.sharded_leg)))
+        return
 
     on_tpu = jax.default_backend() == "tpu"
     scales = {"xla": args.scale,
@@ -222,6 +307,24 @@ def main():
           f" cold={d['cold_pagerank_ms']:.2f}ms"
           f" ({d['warm_pagerank_speedup']:.1f}x);"
           f" bfs reseed {d['bfs_reseed_speedup']:.1f}x")
+
+    # sharded backend: 1 vs 8 simulated devices.  Absolute times are
+    # info-only — the 8 "devices" share one CPU, so the dense (replicated)
+    # portion of every round runs 8x over; the portable numbers here are
+    # halo_bytes_per_round and the bitwise-identity assert inside each leg.
+    leg1 = bench_sharded(args.bfs_scale, args.edge_factor, args.n_iter,
+                         args.repeats, 1)
+    leg8 = _sharded_leg(8, args)
+    results["sharded"] = {
+        "scale": args.bfs_scale, "legs": {"1": leg1, "8": leg8},
+        "pagerank_ratio_8v1":
+            round(leg1["pagerank_ms"] / leg8["pagerank_ms"], 3),
+        "bfs_ratio_8v1": round(leg1["bfs_ms"] / leg8["bfs_ms"], 3)}
+    for leg in (leg1, leg8):
+        print(f"sharded d={leg['devices']} scale={leg['scale']:2d}"
+              f" pagerank={leg['pagerank_ms']:9.2f}ms"
+              f" bfs={leg['bfs_ms']:9.2f}ms"
+              f" halo={leg['halo_bytes_per_round']}B/round")
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

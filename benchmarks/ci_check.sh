@@ -8,6 +8,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# stage <name> <cmd...>: run one pipeline stage, echoing its elapsed wall
+# time so slow stages are attributable straight from the Actions log.
+# set -e still aborts on the first failing stage (fail fast).
+stage() {
+  local name="$1"; shift
+  local t0=$SECONDS
+  echo "--- stage: ${name}"
+  "$@"
+  echo "--- stage: ${name} done in $(( SECONDS - t0 ))s"
+}
+
 FAST=0
 ARGS=()
 for a in "$@"; do
@@ -17,13 +28,13 @@ for a in "$@"; do
   esac
 done
 
-python -m pytest -x -q
+stage tests python -m pytest -x -q
 # serving smoke: spawn a real server subprocess on an ephemeral port, run a
 # scripted wire-protocol client workload, assert a clean drain-and-exit
-python benchmarks/serve_smoke.py
+stage serve_smoke python benchmarks/serve_smoke.py
 # observability smoke: traced in-process workload, Chrome trace-event JSON
 # schema validated, metrics snapshot non-empty
-python benchmarks/obs_smoke.py
+stage obs_smoke python benchmarks/obs_smoke.py
 if [[ "$FAST" == "1" ]]; then
   echo "ci_check OK (--fast tier: tests + server/obs smoke, benchmarks skipped)"
   exit 0
@@ -37,7 +48,7 @@ for f in BENCH_engine.json BENCH_service.json BENCH_memory.json; do
   [[ -f "$f" ]] && cp "$f" "$BASELINE_DIR/"
 done
 
-python benchmarks/bench_engine.py --out BENCH_engine.json \
+stage bench_engine python benchmarks/bench_engine.py --out BENCH_engine.json \
   ${ARGS[@]+"${ARGS[@]}"}
 # frontier gate: sparse BFS must beat the dense relaxation on 2^15 RMAT
 python - <<'EOF'
@@ -69,7 +80,7 @@ EOF
 # with/without fusion + caching (gate: fused_cached >= 2x sequential), plus
 # the overload run — 1 flooding session vs 8 interactive under fifo vs
 # fair-share scheduling (gate: interactive p99 >= 3x better under fair)
-python benchmarks/bench_service.py --out BENCH_service.json
+stage bench_service python benchmarks/bench_service.py --out BENCH_service.json
 python - <<'EOF'
 import json
 r = json.load(open("BENCH_service.json"))
@@ -109,7 +120,7 @@ EOF
 # budget at every sample, answer bit-identically, stay within 1.5x wall
 # time, and must not grow peak RSS — all same-run ratios except RSS, which
 # gets allocator-noise slack
-python benchmarks/bench_memory.py --out BENCH_memory.json
+stage bench_memory python benchmarks/bench_memory.py --out BENCH_memory.json
 python - <<'EOF'
 import json
 m = json.load(open("BENCH_memory.json"))
@@ -134,5 +145,5 @@ print(f"memory gate OK: budget {m['budget_bytes']/1e6:.2f}MB "
 EOF
 # regression delta: fresh ratios vs the committed baseline (>30% fails;
 # absolute ms/qps are machine-relative and reported info-only)
-python benchmarks/bench_delta.py --old-dir "$BASELINE_DIR" --new-dir . \
+stage bench_delta python benchmarks/bench_delta.py --old-dir "$BASELINE_DIR" --new-dir . \
   --threshold 0.30

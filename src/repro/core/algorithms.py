@@ -252,13 +252,20 @@ def triangle_count(g: Graph, edge_chunk: int = 1 << 16, *,
     Default path: degeneracy orientation (cached in the plan) + per-edge
     sorted-adjacency intersection, chunked over edges to bound memory.
     ``backend="bsr"`` dispatches to the A∘(A·A) MXU kernel over the plan's
-    cached 128×128 tiles and block triples (kernels/bsr_tricount.py).
+    cached 128×128 tiles and block triples (kernels/bsr_tricount.py);
+    ``backend="sharded"`` partitions the oriented edges over the graph
+    mesh (core/distributed.py) and ``psum``s the per-device counts.
     """
-    if backend not in (None, "xla", "bsr"):
+    if backend not in (None, "xla", "bsr", "sharded"):
         raise ValueError(f"triangle_count backends are None/'xla' (oriented "
-                         f"intersection) or 'bsr' (MXU kernel); got {backend!r}")
+                         f"intersection), 'bsr' (MXU kernel) or 'sharded' "
+                         f"(mesh-partitioned); got {backend!r}")
     if g.n_edges == 0 or g.n_nodes == 0:
         return 0
+    if backend == "sharded":
+        from ..launch.mesh import graph_mesh
+        from .distributed import triangle_count_distributed
+        return triangle_count_distributed(g, graph_mesh(engine.shard_count()))
     plan = g.plan()
     if backend == "bsr":
         from ..kernels.bsr_tricount import bsr_tricount

@@ -31,6 +31,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..launch.sharding import graph_replicated_spec, graph_shard_spec
 from .graph import Graph
 
 __all__ = [
@@ -45,11 +46,14 @@ __all__ = [
 
 
 def make_graph_mesh(n_devices: Optional[int] = None, axis: str = "gp") -> Mesh:
-    """1-D mesh over all (or the first n) devices for graph collectives."""
-    devs = jax.devices()
-    if n_devices is not None:
-        devs = devs[:n_devices]
-    return jax.make_mesh((len(devs),), (axis,), devices=np.asarray(devs))
+    """1-D mesh over all (or the first n) devices for graph collectives.
+
+    Delegates to :func:`repro.launch.mesh.graph_mesh`, so this module, the
+    ``"sharded"`` engine backend, and the serving layer all share one cached
+    ``Mesh`` object per device count (identity matters: it keys jit caches).
+    """
+    from ..launch.mesh import graph_mesh
+    return graph_mesh(n_devices, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +123,7 @@ def shard_graph(g: Graph, mesh: Mesh, axis: str = "gp") -> DistGraph:
     nvalid = np.zeros((d * ns,), bool)
     nvalid[:n] = True
 
-    shard1 = NamedSharding(mesh, P(axis))
+    shard1 = graph_shard_spec(mesh, axis)
     put = lambda a: jax.device_put(jnp.asarray(a), shard1)
     return DistGraph(
         n_nodes=n, n_edges=g.n_edges, ns=ns, es=es,
@@ -208,7 +212,7 @@ def distributed_to_graph(src: jax.Array, dst: jax.Array, n_nodes: int,
     cap = int(jnp.max(counts[:, :d]))
     cap = max(cap, 1)
 
-    shard1 = NamedSharding(mesh, P(axis))
+    shard1 = graph_shard_spec(mesh, axis)
     src_s = jax.device_put(src, shard1)
     dst_s = jax.device_put(dst, shard1)
     val_s = jax.device_put(valid, shard1)
@@ -291,11 +295,11 @@ def triangle_count_distributed(g: Graph, mesh: Mesh, axis: str = "gp",
     odst = jnp.concatenate([odst, jnp.zeros((pad,), jnp.int32)])
     evalid = jnp.arange(per * d) < e
 
-    shard1 = NamedSharding(mesh, P(axis))
+    shard1 = graph_shard_spec(mesh, axis)
     osrc = jax.device_put(osrc, shard1)
     odst = jax.device_put(odst, shard1)
     evalid = jax.device_put(evalid, shard1)
-    nbr_r = jax.device_put(nbr, NamedSharding(mesh, P()))   # replicated
+    nbr_r = jax.device_put(nbr, graph_replicated_spec(mesh))  # replicated
 
     @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(axis), P(axis), P(axis), P()),

@@ -18,8 +18,11 @@ whole algorithm library):
         |                               "bsr"    kernels/bsr_spmv MXU SpMV
         |                                        (fused gather+sum pulls and
         |                                        pushes via transpose tiles)
-        v                               "frontier" sparse compacted-frontier
-                                                 relaxation (monotone min)
+        |                               "frontier" sparse compacted-frontier
+        |                                        relaxation (monotone min)
+        v                               "sharded" shard_map over a 1-D device
+                                                 mesh: vertex-range partition
+                                                 + halo boundary exchange
     core/algorithms.py  pagerank, hits, eigenvector_centrality, CC, SCC,
                         sssp/bfs (batched multi-source), k-core, label
                         propagation, triangles — thin compositions over the
@@ -58,6 +61,17 @@ speed):
     "pallas"   one-hot matmul     fallback    yes (f32)   fallback  —
     "bsr"      MXU SpMV           fallback    fallback    fallback  —
     "frontier" fallback (xla)     fallback    —           —         sparse
+    "sharded"  shard_map reduce   yes         yes         fallback  —
+
+The "sharded" backend partitions both CSR orders by contiguous vertex
+ranges over a 1-D device mesh (``plan.sharded(d)``): each device owns
+``ceil(n/d)`` vertices, the whole in-segment of every owned destination
+(pull) and out-segment of every owned source (push), plus halo index sets
+for the cut edges.  Each round is one ``shard_map``: gather each shard's
+exported boundary values, ``all_gather`` them into a halo, reduce locally.
+Because a vertex's entire edge segment stays on its owner in global order,
+the shard-local segment reduction is **bit-identical** to the global one —
+backend neutrality holds exactly, not just approximately.
 
 ``select_backend(plan, backend, op=...)`` resolves op/backend combinations:
 ops outside a backend's support set (``_FRONTIER_OPS`` for "frontier")
@@ -68,12 +82,15 @@ from __future__ import annotations
 
 import functools
 import os
+import threading
 from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from .. import obs
 from ..kernels.bsr_spmv import bsr_spmv
@@ -84,9 +101,9 @@ from .table import next_capacity
 
 __all__ = ["BACKENDS", "select_backend", "get_exec", "push", "pull",
            "fixpoint", "frontier_fixpoint", "XlaExec", "PallasExec",
-           "BsrExec", "FrontierExec"]
+           "BsrExec", "FrontierExec", "ShardedExec"]
 
-BACKENDS = ("xla", "pallas", "bsr", "frontier")
+BACKENDS = ("xla", "pallas", "bsr", "frontier", "sharded")
 
 # -- observability instruments (module-cached: no registry lookup on the hot
 # path; all of them no-op on one attribute check when obs is disabled) -------
@@ -105,6 +122,11 @@ _C_RETRACE = obs.counter("engine.frontier.retraces")
 # (rows, node bucket, edge budget, weighted, dtype) signatures already traced
 # by the bucketed-pow2 frontier steps: a new signature = one jit retrace
 _TRACED_SHAPES: set = set()
+
+# trace-time flag: True while tracing inside a ShardedExec shard_map manual
+# region (``run_loop``), so nested primitive calls emit collectives directly
+# instead of opening another (illegal) nested shard_map
+_MANUAL_REGION = threading.local()
 
 # Auto-selection thresholds: below them the re-blocked kernels cannot beat
 # plain segment reductions (tile/chunk padding dominates).
@@ -226,6 +248,16 @@ class XlaExec:
         return _REDUCERS[combine](edge_vals, self.out_src,
                                   num_segments=self.n_nodes,
                                   indices_are_sorted=True)
+
+    # -- fixpoint hooks -----------------------------------------------------------
+    def run_loop(self, loop, *args):
+        """Run a fixpoint loop (identity wrapper for local backends).
+
+        :class:`ShardedExec` overrides this to run the whole loop inside a
+        shard_map manual region so the partitioner cannot turn the body's
+        dense reductions into per-shard partials (see there).
+        """
+        return loop(self, *args)
 
     # -- fused traversal primitives ---------------------------------------------
     def pull(self, x: jax.Array, combine: str = "sum",
@@ -391,21 +423,232 @@ class FrontierExec(XlaExec):
         return cls(*aux, *leaves)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ShardedExec(XlaExec):
+    """Multi-device primitives: shard_map over a 1-D vertex-range mesh.
+
+    Every 1-D ``pull``/``push``/``reduce_in``/``reduce_out`` runs as one
+    ``shard_map`` round: each device gathers its exported boundary values
+    (``*_bnd``), an ``all_gather`` concatenates them into the halo, each
+    local edge slot gathers from ``[local | halo]`` via ``*_gidx`` and
+    reduces into its shard-local segment (``*_seg``).  Padding slots
+    reduce into the overflow segment ``ns`` (sliced off), so they cannot
+    perturb real vertices even by a signed zero, and because each vertex's
+    whole edge segment stays on its owner in global order the result is
+    bit-identical to ``XlaExec``.  Batched (2-D) inputs and per-edge-order
+    gathers fall back to the inherited global primitives.
+
+    The mesh is static aux data in the pytree (``Mesh`` is hashable), so
+    jitted fixpoint runners cache per (device-count, shape) signature and
+    the same body re-runs warm on the same mesh.
+    """
+
+    d: int = 1                      # shard / device count
+    ns: int = 1                     # vertices per shard
+    axis: str = "gp"                # mesh axis name
+    mesh: object = None             # 1-D jax Mesh (static, hashable)
+    p_es: int = 1                   # pull: padded edge slots per shard
+    p_halo: int = 1                 # pull: boundary slots per shard
+    q_es: int = 1                   # push duals
+    q_halo: int = 1
+    p_gidx: jax.Array = None        # (d*p_es,) into [local(ns) | halo]
+    p_seg: jax.Array = None         # (d*p_es,) local segment, pad -> ns
+    p_slot: jax.Array = None        # (E,) in-edge order -> flat pull slot
+    p_bnd: jax.Array = None         # (d*p_halo,) exported local ids
+    q_gidx: jax.Array = None
+    q_seg: jax.Array = None
+    q_slot: jax.Array = None
+    q_bnd: jax.Array = None
+
+    def tree_flatten(self):
+        return ((self.in_src, self.in_dst, self.out_src, self.out_dst,
+                 self.p_gidx, self.p_seg, self.p_slot, self.p_bnd,
+                 self.q_gidx, self.q_seg, self.q_slot, self.q_bnd),
+                (self.n_nodes, self.n_edges, self.d, self.ns, self.axis,
+                 self.mesh, self.p_es, self.p_halo, self.q_es, self.q_halo))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        (n_nodes, n_edges, d, ns, axis, mesh,
+         p_es, p_halo, q_es, q_halo) = aux
+        return cls(n_nodes, n_edges, *leaves[:4], d=d, ns=ns, axis=axis,
+                   mesh=mesh, p_es=p_es, p_halo=p_halo, q_es=q_es,
+                   q_halo=q_halo, p_gidx=leaves[4], p_seg=leaves[5],
+                   p_slot=leaves[6], p_bnd=leaves[7], q_gidx=leaves[8],
+                   q_seg=leaves[9], q_slot=leaves[10], q_bnd=leaves[11])
+
+    # -- shard_map building blocks ----------------------------------------------
+    #
+    # Bit-identity vs "xla" is non-negotiable here, and it constrains the
+    # whole design: any value the GSPMD partitioner is free to shard gets
+    # its dense reductions (PageRank's dangling mass, HITS' norms) split
+    # into per-shard partials + all-reduce — numerically fine, bitwise
+    # different.  Sharding *constraints* do not help: the partitioner may
+    # re-shard the consumers of a pinned value (observed: it slices the
+    # fixpoint carry to f32[ns] per device and partializes the sums even
+    # through an optimization_barrier).  So nothing is left to GSPMD:
+    # every sharded computation — including the whole fixpoint loop, see
+    # ``run_loop`` — executes inside a shard_map *manual* region, where
+    # dense ops run full-shape and replicated on every device in exactly
+    # the single-device order, and only the explicitly written collectives
+    # (the halo exchange and the result gather) move data.
+
+    def _mapped(self, fn, *args):
+        """Run ``fn`` in the manual region (entering one if needed).
+
+        Inputs and outputs are replicated (``P()``); ``fn`` slices its own
+        shard out of each flat ``(d * per_shard,)`` array via
+        ``axis_index``.  ``check_rep=False`` because the final
+        ``all_gather`` makes the output replicated by construction, which
+        jax's replication checker cannot infer.
+        """
+        if getattr(_MANUAL_REGION, "active", False):
+            return fn(*args)
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=(PartitionSpec(),) * len(args),
+                         out_specs=PartitionSpec(), check_rep=False)(*args)
+
+    def run_loop(self, loop, *args):
+        """Run a whole fixpoint loop as one shard_map manual region.
+
+        The loop carry, the convergence tests, and every dense op in the
+        body stay full-shape and replicated on each device; the pull/push
+        primitives inside notice the active region (``_MANUAL_REGION``)
+        and emit their collectives directly instead of nesting another
+        shard_map.
+        """
+
+        def fn(ex, args_):
+            _MANUAL_REGION.active = True
+            try:
+                return loop(ex, *args_)
+            finally:
+                _MANUAL_REGION.active = False
+
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=(PartitionSpec(), PartitionSpec()),
+                         out_specs=PartitionSpec(),
+                         check_rep=False)(self, args)
+
+    def _rekey(self, edge_vals: jax.Array, slot: jax.Array,
+               es: int) -> jax.Array:
+        """Scatter global-edge-order values into the flat padded layout."""
+        return jnp.zeros((self.d * es,), edge_vals.dtype).at[slot] \
+            .set(edge_vals)
+
+    def _exchange_reduce(self, x, combine, gidx, seg, bnd, es, halo,
+                         ev_sh, edge_op):
+        """One boundary-exchange round: halo gather + local segment reduce."""
+        reducer = _REDUCERS[combine]
+        d, ns, ax = self.d, self.ns, self.axis
+
+        def run(xp, gidx_f, seg_f, bnd_f, *ev_rest):
+            i = jax.lax.axis_index(ax)
+            x_loc = jax.lax.dynamic_slice(xp, (i * ns,), (ns,))
+            bnd_loc = jax.lax.dynamic_slice(bnd_f, (i * halo,), (halo,))
+            halo_vals = jax.lax.all_gather(x_loc[bnd_loc], ax, tiled=True)
+            ev = jnp.concatenate([x_loc, halo_vals])[
+                jax.lax.dynamic_slice(gidx_f, (i * es,), (es,))]
+            if ev_rest:
+                e = ev_rest[0]
+                if e.ndim:
+                    e = jax.lax.dynamic_slice(e, (i * es,), (es,))
+                ev = ev * e if edge_op == "mul" else ev + e
+            loc = reducer(ev, jax.lax.dynamic_slice(seg_f, (i * es,), (es,)),
+                          num_segments=ns + 1, indices_are_sorted=True)[:ns]
+            return jax.lax.all_gather(loc, ax, tiled=True)
+
+        args = [jnp.pad(x, (0, d * ns - self.n_nodes)), gidx, seg, bnd]
+        if ev_sh is not None:
+            args.append(ev_sh)
+        return self._mapped(run, *args)[: self.n_nodes]
+
+    def _segment_reduce(self, ev_sh, seg, es, combine):
+        """Halo-free shard-local segment reduction (values already placed)."""
+        reducer = _REDUCERS[combine]
+        ns, ax = self.ns, self.axis
+
+        def run(ev_f, seg_f):
+            i = jax.lax.axis_index(ax)
+            loc = reducer(jax.lax.dynamic_slice(ev_f, (i * es,), (es,)),
+                          jax.lax.dynamic_slice(seg_f, (i * es,), (es,)),
+                          num_segments=ns + 1, indices_are_sorted=True)[:ns]
+            return jax.lax.all_gather(loc, ax, tiled=True)
+
+        return self._mapped(run, ev_sh, seg)[: self.n_nodes]
+
+    # -- primitives --------------------------------------------------------------
+    def reduce_in(self, edge_vals, combine="sum"):
+        if edge_vals.ndim != 1:
+            return super().reduce_in(edge_vals, combine)
+        return self._segment_reduce(
+            self._rekey(edge_vals, self.p_slot, self.p_es),
+            self.p_seg, self.p_es, combine)
+
+    def reduce_out(self, edge_vals, combine="sum"):
+        if edge_vals.ndim != 1:
+            return super().reduce_out(edge_vals, combine)
+        return self._segment_reduce(
+            self._rekey(edge_vals, self.q_slot, self.q_es),
+            self.q_seg, self.q_es, combine)
+
+    def pull(self, x, combine="sum", edge_values=None, edge_op="mul"):
+        if x.ndim != 1:
+            return super().pull(x, combine, edge_values, edge_op)
+        ev_sh = None
+        if edge_values is not None:
+            ev = jnp.asarray(edge_values)
+            if ev.ndim > 1:
+                return super().pull(x, combine, edge_values, edge_op)
+            ev_sh = ev if ev.ndim == 0 \
+                else self._rekey(ev, self.p_slot, self.p_es)
+        return self._exchange_reduce(x, combine, self.p_gidx, self.p_seg,
+                                     self.p_bnd, self.p_es, self.p_halo,
+                                     ev_sh, edge_op)
+
+    def push(self, x, combine="sum", edge_values=None, edge_op="mul"):
+        if x.ndim != 1:
+            return super().push(x, combine, edge_values, edge_op)
+        ev_sh = None
+        if edge_values is not None:
+            ev = jnp.asarray(edge_values)
+            if ev.ndim > 1:
+                return super().push(x, combine, edge_values, edge_op)
+            ev_sh = ev if ev.ndim == 0 \
+                else self._rekey(ev, self.q_slot, self.q_es)
+        return self._exchange_reduce(x, combine, self.q_gidx, self.q_seg,
+                                     self.q_bnd, self.q_es, self.q_halo,
+                                     ev_sh, edge_op)
+
+
 # ---------------------------------------------------------------------------
 # exec construction (cached on the plan)
 # ---------------------------------------------------------------------------
 
 
+def shard_count(n_shards: Optional[int] = None) -> int:
+    """Resolve the shard count: explicit > REPRO_SHARD_COUNT > all devices."""
+    if n_shards is not None:
+        return int(n_shards)
+    env = os.environ.get("REPRO_SHARD_COUNT")
+    if env:
+        return int(env)
+    return len(jax.devices())
+
+
 def get_exec(plan, backend: Optional[str] = None, *,
              interpret: Optional[bool] = None,
              block: int = DEFAULT_BLOCK,
-             chunk: int = DEFAULT_CHUNK) -> XlaExec:
+             chunk: int = DEFAULT_CHUNK,
+             n_shards: Optional[int] = None) -> XlaExec:
     """Backend Exec for a :class:`GraphPlan`, memoized on the plan."""
     backend = select_backend(plan, backend)
     if plan.n_nodes == 0:
         backend = "xla"   # degenerate: the re-blocked kernels have no rows
     interp = auto_interpret(interpret)
-    key = (backend, interp, block, chunk)
+    shards = shard_count(n_shards) if backend == "sharded" else 0
+    key = (backend, interp, block, chunk, shards)
     ex = plan.execs.get(key)
     if ex is not None:
         _C_EXEC_HIT.inc()
@@ -415,6 +658,15 @@ def get_exec(plan, backend: Optional[str] = None, *,
             plan.out_src, plan.out_dst)
     if backend == "xla":
         ex = XlaExec(*base)
+    elif backend == "sharded":
+        sp = plan.sharded(shards)
+        ex = ShardedExec(*base, d=sp.d, ns=sp.ns, axis=sp.axis, mesh=sp.mesh,
+                         p_es=sp.pull.es, p_halo=sp.pull.halo,
+                         q_es=sp.push.es, q_halo=sp.push.halo,
+                         p_gidx=sp.pull.gather_idx, p_seg=sp.pull.seg_local,
+                         p_slot=sp.pull.edge_slot, p_bnd=sp.pull.boundary,
+                         q_gidx=sp.push.gather_idx, q_seg=sp.push.seg_local,
+                         q_slot=sp.push.edge_slot, q_bnd=sp.push.boundary)
     elif backend == "frontier":
         ptr, idx, deg_pad = plan.csr_out()
         ex = FrontierExec(*base, ptr, idx, deg_pad, plan.in_perm_out())
@@ -483,12 +735,17 @@ def _residual(old, new) -> jax.Array:
     return tot
 
 
-def _runner(body: Callable, fixed):
-    key = (body, fixed)
+def _runner(body: Callable, fixed, manual: bool = False):
+    # ``manual`` = this fixpoint is being traced inside an enclosing
+    # ShardedExec.run_loop region (nested fixpoints: SCC's color/reach
+    # solves inside _scc_round).  Those must NOT wrap another shard_map —
+    # manual regions cannot nest — so they run the bare loop; keying the
+    # jit cache on the flag keeps the two tracings from sharing a jaxpr.
+    key = (body, fixed, manual)
     run = _RUNNERS.get(key)
     if run is None:
         if fixed == "tol":
-            def run_py(ex, init, max_iter, tol, *args):
+            def loop_py(ex, init, max_iter, tol, *args):
                 def cond(carry):
                     _, i, res = carry
                     return (res > tol) & (i < max_iter)
@@ -505,11 +762,11 @@ def _runner(body: Callable, fixed):
                 # only when obs is enabled and the call is not being traced)
                 return final, iters
         elif fixed:
-            def run_py(ex, init, n_iter, *args):
+            def loop_py(ex, init, n_iter, *args):
                 return jax.lax.fori_loop(
                     0, n_iter, lambda _, s: body(ex, s, *args), init)
         else:
-            def run_py(ex, init, max_iter, *args):
+            def loop_py(ex, init, max_iter, *args):
                 def cond(carry):
                     _, i, changed = carry
                     return changed & (i < max_iter)
@@ -522,6 +779,14 @@ def _runner(body: Callable, fixed):
                 final, _, _ = jax.lax.while_loop(
                     cond, step, (init, jnp.int32(0), jnp.bool_(True)))
                 return final
+
+        if manual:
+            def run_py(ex, *a):
+                return loop_py(ex, *a)
+        else:
+            def run_py(ex, *a):
+                return ex.run_loop(loop_py, *a)
+
         run = _RUNNERS[key] = jax.jit(run_py)
     return run
 
@@ -547,10 +812,11 @@ def fixpoint(plan_or_exec, body: Callable, init, *,
     """
     ex = (plan_or_exec if isinstance(plan_or_exec, XlaExec)
           else get_exec(plan_or_exec, backend))
+    manual = getattr(_MANUAL_REGION, "active", False)
     if tol is not None:
         cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
-        out, iters = _runner(body, "tol")(ex, init, jnp.int32(cap),
-                                          jnp.float32(tol), *args)
+        out, iters = _runner(body, "tol", manual)(ex, init, jnp.int32(cap),
+                                                  jnp.float32(tol), *args)
         # skip the scalar fetch when disabled; under a jax trace (vmapped
         # tol solves) the counter is abstract and cannot be observed
         if obs.REGISTRY.enabled:
@@ -565,9 +831,9 @@ def fixpoint(plan_or_exec, body: Callable, init, *,
                                   buckets=obs.COUNT_BUCKETS).observe(n)
         return out
     if n_iter is not None:
-        return _runner(body, True)(ex, init, jnp.int32(n_iter), *args)
+        return _runner(body, True, manual)(ex, init, jnp.int32(n_iter), *args)
     cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
-    return _runner(body, False)(ex, init, jnp.int32(cap), *args)
+    return _runner(body, False, manual)(ex, init, jnp.int32(cap), *args)
 
 
 # ---------------------------------------------------------------------------

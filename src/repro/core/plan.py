@@ -35,6 +35,11 @@ Lazily built and cached on first use:
     chunk_layout_in / chunk_layout_out
                        static chunk structure for the Pallas segment-sum
                        backend (pull / push reduction order respectively)
+    sharded(d)         per-shard arrays for the multi-device "sharded"
+                       backend: contiguous vertex-range partition of both
+                       CSR orders, halo/boundary index sets for the cut
+                       edges, and padded degree slices — one ShardPlan per
+                       device count, placed on the 1-D graph mesh
 
 The execution primitives that consume these live in
 :mod:`repro.core.engine`; per-backend ``Exec`` pytrees are cached here in
@@ -44,7 +49,7 @@ The execution primitives that consume these live in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,13 +58,110 @@ import numpy as np
 from .graph import EdgeDelta, Graph
 from ..kernels.segment_sum import DEFAULT_BLOCK, DEFAULT_CHUNK, chunk_layout
 
-__all__ = ["GraphPlan", "EVICTABLE_FAMILIES"]
+__all__ = ["GraphPlan", "ShardPlan", "EVICTABLE_FAMILIES"]
 
 # Derived-array families a plan can drop and rebuild on next touch.  "base"
 # (the eager sorted-edge/degree arrays) and the graph's own CSR storage are
 # deliberately absent: they are the plan, not a cache over it.
 EVICTABLE_FAMILIES: Tuple[str, ...] = (
-    "undirected", "oriented", "csr", "perm", "bsr", "tri", "chunks", "execs")
+    "undirected", "oriented", "csr", "perm", "bsr", "tri", "chunks",
+    "sharded", "execs")
+
+
+class _ShardDir(NamedTuple):
+    """One direction (pull or push) of a vertex-range partition.
+
+    All per-shard buffers use the flat ``(d * per_shard,)`` layout and are
+    replicated on the graph mesh; the engine's manual regions slice shard
+    ``i``'s block out via ``axis_index``.  ``gather_idx`` addresses the
+    concatenation ``[local x (ns values), halo (d * halo values)]`` built
+    inside each round's boundary exchange; ``seg_local`` maps each edge
+    slot to its shard-local segment, with padding slots pointing at the
+    overflow segment ``ns`` (sliced off after the reduction, so pad slots
+    can never perturb a real vertex — not even by adding a signed zero).
+    """
+
+    es: int                 # padded edge slots per shard
+    halo: int               # boundary slots per shard (max cut fan-in)
+    gather_idx: jax.Array   # (d*es,) int32 into [local(ns) | halo(d*halo)]
+    seg_local: jax.Array    # (d*es,) int32 local segment id, pad -> ns
+    edge_slot: jax.Array    # (E,) int32: global edge order -> flat slot
+    boundary: jax.Array     # (d*halo,) int32 local ids each shard exports
+
+
+class ShardPlan(NamedTuple):
+    """Per-device-count derived arrays for the "sharded" engine backend.
+
+    ``pull`` partitions the dst-sorted in-edges by destination range (each
+    vertex's whole in-segment stays on its owner, in order — this is what
+    makes the shard-local segment reduction bit-identical to the global
+    one); ``push`` partitions the src-sorted out-edges by source range.
+    ``out_deg`` / ``in_deg`` are the degree vectors padded to ``d * ns``,
+    replicated on the mesh like every other per-shard buffer.
+    """
+
+    d: int                  # shard / device count
+    ns: int                 # vertices per shard (ceil(n / d), >= 1)
+    axis: str               # mesh axis name
+    mesh: object            # the 1-D jax Mesh (hashable, identity-cached)
+    pull: _ShardDir
+    push: _ShardDir
+    out_deg: jax.Array      # (d*ns,) padded, mesh-replicated
+    in_deg: jax.Array       # (d*ns,) padded, mesh-replicated
+
+    def halo_bytes_per_round(self, itemsize: int = 4) -> int:
+        """Bytes materialized per device by one pull-side halo all-gather."""
+        return self.d * self.pull.halo * itemsize
+
+
+def _build_shard_dir(key: np.ndarray, other: np.ndarray, d: int, ns: int,
+                     spec) -> _ShardDir:
+    """Partition one edge order by contiguous ``key`` ranges.
+
+    ``key`` is the sorted segment endpoint (dst for pull, src for push),
+    ``other`` the gathered endpoint.  Shard ``i`` owns vertices
+    ``[i*ns, (i+1)*ns)`` and therefore the contiguous edge slice whose keys
+    fall in that range.  Cut edges (``other`` owned elsewhere) index into
+    the halo: owner ``o`` exports its sorted unique referenced vertices
+    (its boundary set), and the flat halo position is
+    ``ns + o*halo + rank``.
+    """
+    e = int(key.shape[0])
+    key = key.astype(np.int64)
+    other = other.astype(np.int64)
+    starts = np.searchsorted(key, np.arange(d, dtype=np.int64) * ns,
+                             side="left")
+    ends = np.searchsorted(key, np.arange(1, d + 1, dtype=np.int64) * ns,
+                           side="left")
+    es = max(int((ends - starts).max()) if d else 0, 1)
+    shard_of = key // ns
+    owner_of = other // ns
+    remote = owner_of != shard_of
+    bnd_sets = [np.unique(other[remote & (owner_of == o)]) for o in range(d)]
+    halo = max(max((v.size for v in bnd_sets), default=0), 1)
+    boundary = np.zeros((d, halo), np.int32)
+    for o, vs in enumerate(bnd_sets):
+        boundary[o, : vs.size] = (vs - o * ns).astype(np.int32)
+    gidx_e = np.where(remote, 0, other - shard_of * ns)
+    for o in range(d):
+        m = remote & (owner_of == o)
+        if m.any():
+            gidx_e[m] = ns + o * halo + np.searchsorted(bnd_sets[o], other[m])
+    gidx = np.zeros((d, es), np.int32)
+    seg = np.full((d, es), ns, np.int32)
+    slot = np.zeros((e,), np.int32)
+    for i in range(d):
+        s0, s1 = int(starts[i]), int(ends[i])
+        c = s1 - s0
+        gidx[i, :c] = gidx_e[s0:s1]
+        seg[i, :c] = key[s0:s1] - i * ns
+        slot[s0:s1] = i * es + np.arange(c, dtype=np.int32)
+    return _ShardDir(
+        es=es, halo=halo,
+        gather_idx=jax.device_put(jnp.asarray(gidx.reshape(-1)), spec),
+        seg_local=jax.device_put(jnp.asarray(seg.reshape(-1)), spec),
+        edge_slot=jnp.asarray(slot),
+        boundary=jax.device_put(jnp.asarray(boundary.reshape(-1)), spec))
 
 
 def _tree_bytes(obj, seen: set) -> int:
@@ -126,6 +228,7 @@ class GraphPlan:
     _tri_triples: Dict = field(default_factory=dict, repr=False, compare=False)
     _chunks_in: Dict = field(default_factory=dict, repr=False, compare=False)
     _chunks_out: Dict = field(default_factory=dict, repr=False, compare=False)
+    _sharded: Dict = field(default_factory=dict, repr=False, compare=False)
     # delta lineage (set by :meth:`patch` only): dense ids of the vertices
     # the delta touched, the parent's plan, and the _DeltaInfo it came from
     dirty_vertices: Optional[np.ndarray] = field(default=None, repr=False,
@@ -391,6 +494,46 @@ class GraphPlan:
                 chunk_layout(np.asarray(self.out_src), self.n_nodes, chunk))
         return self._chunks_out[chunk]
 
+    def sharded(self, n_shards: int, axis: Optional[str] = None) -> ShardPlan:
+        """Vertex-range partition over ``n_shards`` devices, memoized per count.
+
+        Partitioning happens once on the host (numpy over the already-sorted
+        edge arrays — contiguous range split is two searchsorteds per
+        direction); the resulting buffers are placed on the cached 1-D graph
+        mesh.  A delta child starts with an empty ``_sharded`` cache, so
+        ``apply_delta`` invalidation falls out of plan identity exactly like
+        every other family; :meth:`evict` can drop the whole dict and the
+        next touch rebuilds bit-identically.
+        """
+        from ..launch.mesh import GRAPH_AXIS, graph_mesh
+        from ..launch.sharding import graph_replicated_spec
+        axis = GRAPH_AXIS if axis is None else axis
+        d = int(n_shards)
+        if d < 1:
+            raise ValueError(f"sharded() needs >= 1 shard, got {d}")
+        if d not in self._sharded:
+            mesh = graph_mesh(d, axis)
+            # replicated placement: the engine's manual regions take every
+            # input full-shape (in_specs P()) and slice their own shard via
+            # axis_index — see ShardedExec in core/engine.py for why GSPMD
+            # is given no sharding decisions at all on this path
+            spec = graph_replicated_spec(mesh)
+            n = self.n_nodes
+            ns = max(-(-n // d) if d else 1, 1)
+            pull = _build_shard_dir(np.asarray(self.in_dst),
+                                    np.asarray(self.in_src), d, ns, spec)
+            push = _build_shard_dir(np.asarray(self.out_src),
+                                    np.asarray(self.out_dst), d, ns, spec)
+            pad = d * ns - n
+            out_deg = jax.device_put(
+                jnp.pad(self.out_deg, (0, pad)), spec)
+            in_deg = jax.device_put(
+                jnp.pad(self.in_deg, (0, pad)), spec)
+            self._sharded[d] = ShardPlan(d=d, ns=ns, axis=axis, mesh=mesh,
+                                         pull=pull, push=push,
+                                         out_deg=out_deg, in_deg=in_deg)
+        return self._sharded[d]
+
     # -- byte accounting + eviction ----------------------------------------------
     def _families(self) -> Dict[str, object]:
         """Family name -> the cached member(s) it covers (None/{} = cold)."""
@@ -405,6 +548,7 @@ class GraphPlan:
             "bsr": (self._bsr, self._bsr_t),
             "tri": self._tri_triples,
             "chunks": (self._chunks_in, self._chunks_out),
+            "sharded": self._sharded,
             "execs": self.execs,
             "lineage": self._info,
         }
@@ -488,6 +632,8 @@ class GraphPlan:
         elif family == "chunks":
             self._chunks_in = {}
             self._chunks_out = {}
+        elif family == "sharded":
+            self._sharded = {}
         if family != "execs" and self.execs:
             freed += fams["execs"]
             self.execs = {}

@@ -8,11 +8,45 @@ import when they need placeholder devices.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_host_mesh", "DATA_AXES"]
+__all__ = ["make_production_mesh", "make_host_mesh", "DATA_AXES",
+           "GRAPH_AXIS", "graph_mesh"]
+
+#: mesh axis name used by the graph engine's 1-D vertex-range partition
+#: (``core.plan.sharded`` / ``core.engine.ShardedExec`` /
+#: ``core.distributed``)
+GRAPH_AXIS = "gp"
+
+
+@functools.lru_cache(maxsize=None)
+def graph_mesh(n_shards: Optional[int] = None, axis: str = GRAPH_AXIS):
+    """Cached 1-D mesh over the first ``n_shards`` devices.
+
+    The graph engine's ``"sharded"`` backend partitions vertex ranges
+    along a single mesh axis; every exec for the same shard count reuses
+    the same ``Mesh`` object (it is hashable and participates in jit
+    cache keys, so identity reuse keeps compiled runners warm).
+
+    ``n_shards=None`` means all visible devices.  Raises when more
+    shards are requested than devices exist — on CPU-only hosts set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax import to simulate an N-device mesh.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_shards is None else int(n_shards)
+    if n < 1:
+        raise ValueError(f"graph_mesh needs >= 1 shard, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"graph_mesh({n}) but only {len(devs)} device(s) visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before importing jax to simulate a host mesh")
+    return jax.make_mesh((n,), (axis,), devices=np.asarray(devs[:n]))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -25,7 +25,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "LogicalRules", "default_rules", "rules_ctx", "shard", "logical_to_spec",
     "param_specs", "current_rules",
+    "graph_shard_spec", "graph_replicated_spec",
 ]
+
+
+# ---------------------------------------------------------------------------
+# graph-engine shardings
+# ---------------------------------------------------------------------------
+# The graph side of the repo (core.plan / core.engine / core.distributed)
+# lays every per-shard array out as a flat (d * per_shard,) buffer and
+# range-partitions it along the mesh's single graph axis.  These two
+# helpers are the only NamedShardings the graph engine constructs, so the
+# placement convention lives in one spot.
+
+def graph_shard_spec(mesh: Mesh, axis: str = "gp") -> NamedSharding:
+    """Row sharding for flat ``(d * per_shard,)`` graph-engine buffers."""
+    return NamedSharding(mesh, P(axis))
+
+
+def graph_replicated_spec(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement on the graph mesh (scalars, small refs)."""
+    return NamedSharding(mesh, P())
 
 _state = threading.local()
 

@@ -138,6 +138,17 @@ _OPS: Dict[str, Tuple[Callable, Dict[str, str]]] = {
     "clustering_coefficient": (A.clustering_coefficient, {"graph": "g"}),
 }
 
+# ops whose callable accepts ``backend=`` (engine backend dispatch): a
+# service-level ``engine_backend`` is injected into their params before
+# canonicalization, so cache/fuse keys distinguish backends and every
+# algorithm inherits e.g. the multi-device "sharded" engine unmodified
+_BACKEND_OPS = {
+    "pagerank", "personalized_pagerank", "sssp", "bfs", "hits",
+    "connected_components", "strongly_connected_components", "k_core",
+    "core_numbers", "label_propagation", "eigenvector_centrality",
+    "closeness_centrality", "triangle_count",
+}
+
 # single-source traversals the scheduler may coalesce into one vmapped call;
 # value = the parameter holding the source vertex
 _FUSABLE: Dict[str, str] = {
@@ -733,9 +744,15 @@ class GraphService:
                  max_cache_entries: int = 1024,
                  policy: Optional[SchedulerPolicy] = None,
                  memory: Optional[MemoryPolicy] = None,
-                 workers: int = 0):
+                 workers: int = 0,
+                 engine_backend: Optional[str] = None):
         self.workspace = workspace if workspace is not None else Workspace()
         self.fuse = fuse
+        # default engine backend for every _BACKEND_OPS request that does
+        # not name one explicitly ("sharded" turns the whole service
+        # multi-device); injected before canonicalization in _prepare so
+        # result-cache and fusion keys never mix backends
+        self.engine_backend = engine_backend
         self.cache_enabled = cache
         # delta-aware serving: retain provably-unaffected cache entries
         # across Workspace.apply_delta and warm-start recomputation from the
@@ -979,6 +996,9 @@ class GraphService:
         try:
             inputs = self._resolve_inputs(p)
             params = dict(p.request.get("params") or {})
+            if (self.engine_backend is not None and op in _BACKEND_OPS
+                    and params.get("backend") is None):
+                params["backend"] = self.engine_backend
             canon = prov.canonical_params(params)
             key = self._cache_key(op, inputs, canon)
         except Exception as e:
@@ -1172,7 +1192,10 @@ class GraphService:
                                                   init=parent_val, **params)
             elif op in ("bfs", "sssp"):
                 source = params.pop("source", None)
-                extra = set(params) - {"n_iter", "weights"}
+                # "backend" is neutral to warm soundness: every backend is
+                # value-identical (the sharded engine bit-identically so),
+                # so the default-backend warm helpers substitute for any
+                extra = set(params) - {"n_iter", "weights", "backend"}
                 if (not extra and params.get("n_iter") is None
                         and params.get("weights") is None
                         and isinstance(source, (int, np.integer))
@@ -1181,10 +1204,10 @@ class GraphService:
                         else A.incremental_sssp
                     out = warm(g, int(source), parent_val)
             elif op == "connected_components":
-                if not set(params):
+                if not set(params) - {"backend"}:
                     out = A.incremental_connected_components(g, parent_val)
             else:                     # label_propagation
-                if not set(params) - {"n_iter"}:
+                if not set(params) - {"n_iter", "backend"}:
                     out = A.incremental_label_propagation(
                         g, parent_val, n_iter=params.get("n_iter", 20))
         except Exception:

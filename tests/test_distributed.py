@@ -1,29 +1,44 @@
-"""Distributed graph engine + DDP: runs in a subprocess with 8 host devices
-(XLA_FLAGS can't change after jax init, so isolation is required)."""
+"""Distributed graph engine + DDP on the simulated 8-device host mesh.
 
+When the test session itself already sees >= 8 devices (the `sharded-sim`
+CI lane exports ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+before pytest starts), the suite runs **in-process** on the ambient mesh —
+same interpreter, real coverage.  On a plain 1-device session the device
+count can't be raised after jax initializes, so the same suite source is
+re-run in a subprocess that sets the flag first; either way the seed
+distributed tests actually execute instead of being skipped.
+"""
+
+import inspect
 import os
 import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
-SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import numpy as np, jax, jax.numpy as jnp
-    assert len(jax.devices()) == 8
+
+def _suite():
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    assert len(jax.devices()) >= 8
 
     from repro.core.graph import Graph
     from repro.core import algorithms as A
     from repro.core.distributed import (make_graph_mesh, shard_graph,
-        pagerank_distributed, distributed_to_graph,
-        triangle_count_distributed, degrees_distributed)
+                                        pagerank_distributed,
+                                        distributed_to_graph,
+                                        triangle_count_distributed,
+                                        degrees_distributed)
 
     rng = np.random.default_rng(3)
     n, m = 400, 2400
-    s = rng.integers(0, n, m); d = rng.integers(0, n, m)
-    keep = s != d; s, d = s[keep], d[keep]
+    s = rng.integers(0, n, m)
+    d = rng.integers(0, n, m)
+    keep = s != d
+    s, d = s[keep], d[keep]
     g = Graph.from_edges(s, d, dedupe=True)
     mesh = make_graph_mesh()
 
@@ -52,12 +67,19 @@ SCRIPT = textwrap.dedent("""
     t_d = triangle_count_distributed(u, mesh, edge_chunk=256)
     assert t_d == A.triangle_count(u), "dist triangles"
 
+    # the "sharded" engine backend on the same mesh: bitwise vs "xla"
+    np.testing.assert_array_equal(
+        np.asarray(A.pagerank(g, n_iter=8, backend="sharded")),
+        np.asarray(A.pagerank(g, n_iter=8, backend="xla")))
+    np.testing.assert_array_equal(
+        np.asarray(A.bfs(g, 0, backend="sharded")),
+        np.asarray(A.bfs(g, 0, backend="xla")))
+
     # explicit DDP with int8 gradient compression trains
     from repro.configs.base import get_config, reduced
     from repro.train.step import make_ddp_step, init_train_state
     from repro.train.compress import init_error_feedback
     from repro.train.optimizer import OptHyper
-    from jax.sharding import PartitionSpec as P
     cfg = reduced(get_config("qwen2.5-3b"))
     mesh2 = jax.make_mesh((8,), ("data",))
     params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
@@ -77,13 +99,24 @@ SCRIPT = textwrap.dedent("""
     assert losses[-1] < losses[0], f"no descent: {losses}"
 
     print("DISTRIBUTED-OK")
-""")
+
+
+# subprocess fallback: same source, device flag set before jax imports
+SCRIPT = ('import os\n'
+          'os.environ["XLA_FLAGS"] = '
+          '"--xla_force_host_platform_device_count=8"\n'
+          + textwrap.dedent(inspect.getsource(_suite))
+          + '\n_suite()\n')
 
 
 @pytest.mark.slow
-def test_distributed_suite():
-    # force CPU: the 8 simulated host devices work under JAX_PLATFORMS=cpu,
-    # and it skips libtpu's minutes-long TPU-metadata probe on TPU-less hosts
+def test_distributed_suite(capsys):
+    if len(jax.devices()) >= 8:
+        _suite()            # ambient simulated host mesh: run in-process
+        assert "DISTRIBUTED-OK" in capsys.readouterr().out
+        return
+    # 1-device session: XLA_FLAGS can't change after jax init -> isolate.
+    # JAX_PLATFORMS=cpu skips libtpu's minutes-long TPU-metadata probe.
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     proc = subprocess.run([sys.executable, "-W", "ignore", "-c", SCRIPT],
                           capture_output=True, text=True, timeout=1200,

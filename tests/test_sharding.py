@@ -133,6 +133,61 @@ def test_hlo_cost_counts_collectives_inside_scans():
         pytest.approx(256 * 4 * 5)
 
 
+# ---------------------------------------------------------------------------
+# 1-D graph mesh (PR 9): shared cached mesh + placement specs
+#
+# These run on the ambient device pool — a single real CPU device is enough
+# for the identity/spec assertions, and the multi-device legs execute for
+# real under the `sharded-sim` CI lane's simulated 8-device host mesh
+# instead of being skipped.
+# ---------------------------------------------------------------------------
+
+
+def test_graph_mesh_cached_identity_and_axis():
+    from repro.launch.mesh import GRAPH_AXIS, graph_mesh
+    m = graph_mesh(1)
+    assert graph_mesh(1) is m          # lru-cached: identity keys jit caches
+    assert m.axis_names == (GRAPH_AXIS,)
+    assert m.devices.shape == (1,)
+
+
+def test_graph_mesh_rejects_oversubscription():
+    from repro.launch.mesh import graph_mesh
+    with pytest.raises(ValueError, match="device"):
+        graph_mesh(len(jax.devices()) + 1)
+
+
+def test_graph_specs_place_arrays():
+    from repro.launch.mesh import GRAPH_AXIS, graph_mesh
+    from repro.launch.sharding import (graph_replicated_spec,
+                                       graph_shard_spec)
+    d = min(2, len(jax.devices()))
+    if d < 2:
+        pytest.skip("needs >= 2 devices (simulated host mesh); the "
+                    "sharded-sim CI lane runs this leg")
+    mesh = graph_mesh(d)
+    sh = graph_shard_spec(mesh)
+    rep = graph_replicated_spec(mesh)
+    assert sh.spec == P(GRAPH_AXIS) and rep.spec == P()
+    x = jax.device_put(jnp.arange(8, dtype=jnp.float32), sh)
+    r = jax.device_put(jnp.arange(8, dtype=jnp.float32), rep)
+    assert len(x.sharding.device_set) == d
+    assert x.sharding.is_equivalent_to(sh, x.ndim)
+    assert r.sharding.is_fully_replicated
+    np.testing.assert_array_equal(np.asarray(x), np.arange(8))
+
+
+def test_shard_plan_uses_shared_mesh():
+    # the engine's per-shard plan family must ride the same cached mesh as
+    # launch-layer consumers, or jit caches fragment per-mesh-object
+    from repro.core.graph import Graph
+    from repro.launch.mesh import graph_mesh
+    g = Graph.from_edges(np.asarray([0, 1, 2], np.int32),
+                         np.asarray([1, 2, 0], np.int32))
+    sp = g.plan().sharded(1)
+    assert sp.mesh is graph_mesh(1)
+
+
 def test_runnable_vs_skip_matrix_documented():
     """Dry-run skip policy matches DESIGN §Arch-applicability."""
     from repro.configs.base import runnable_shapes, list_archs
