@@ -28,12 +28,16 @@ gated**; absolute numbers are printed for information but never fail:
 Metrics that appear or disappear (new benchmark blocks, renamed backends)
 are informational, never failures.
 
-One exception to "ratios only": ``service.obs_overhead.ratio`` (enabled /
+Exceptions to "ratios only": ``service.obs_overhead.ratio`` (enabled /
 disabled wall time of the fused service workload) carries an **absolute
 cap** of 1.05x.  It is already a same-run, same-machine ratio, so the cap
 is hardware-independent — and the observability contract ("under 5%
 overhead") is absolute, not relative to whatever the baseline happened to
 measure.  The cap fails the check even when no baseline file exists.
+Symmetrically, ``service.overload.p99_improvement`` carries an **absolute
+floor** of 3x instead of a delta gate — its FIFO denominator is measured
+under deliberate saturation and swings ~2x between identical runs, so a
+relative threshold flakes while the absolute serving contract does not.
 
 Usage::
 
@@ -54,6 +58,15 @@ _FILES = ("BENCH_engine.json", "BENCH_service.json", "BENCH_memory.json")
 #: budget promises <= 1.5x eviction overhead on the budgeted re-run).
 _ABS_MAX = {"service.obs_overhead.ratio": 1.05,
             "memory.slowdown": 1.5}
+
+#: absolute floors, same idea in the other direction: metric -> min
+#: required value.  The fair-share overload win is a ratio of two p99s
+#: measured under deliberate CPU saturation — its FIFO denominator swings
+#: ~2x run-to-run on a contended box with identical code, so delta-gating
+#: it flakes; the serving contract ("fair share keeps interactive p99 at
+#: least 3x better than FIFO under flood") is absolute, mirroring
+#: ci_check.sh.
+_ABS_MIN = {"service.overload.p99_improvement": 3.0}
 
 
 def _metrics(fname: str, data: dict) -> dict:
@@ -110,8 +123,10 @@ def _metrics(fname: str, data: dict) -> dict:
                 out[f"service.{k}"] = (float(data[k]), "higher", True)
         overload = data.get("overload") or {}
         if "p99_improvement" in overload:
+            # not delta-gated: the FIFO denominator swings ~2x run-to-run
+            # under saturation; the _ABS_MIN floor holds the real contract
             out["service.overload.p99_improvement"] = (
-                float(overload["p99_improvement"]), "higher", True)
+                float(overload["p99_improvement"]), "higher", False)
         obs_blk = data.get("obs_overhead") or {}
         if "ratio" in obs_blk:
             # delta-gating is pointless here (1.00 vs 1.02 is noise); the
@@ -180,6 +195,13 @@ def main() -> int:
                 rows.append((key, old[key][0] if key in old else None,
                              new[key][0],
                              f"EXCEEDS ABSOLUTE CAP {cap} (hard gate)"))
+                continue
+            floor = _ABS_MIN.get(key)
+            if floor is not None and key in new and new[key][0] < floor:
+                failures.append(key)
+                rows.append((key, old[key][0] if key in old else None,
+                             new[key][0],
+                             f"BELOW ABSOLUTE FLOOR {floor} (hard gate)"))
                 continue
             if key not in old:
                 rows.append((key, None, new[key][0], "new metric (info)"))

@@ -69,9 +69,14 @@ def latency_pctls(hist, samples):
     """(p50, p99) served from an obs histogram when it recorded the samples
     — the metrics registry is the latency source of truth now — with the
     hand-rolled interpolated :func:`pctl` kept as the fallback for runs
-    where observability is disabled (the overhead measurement's off leg)."""
+    where observability is disabled (the overhead measurement's off leg)
+    and for degenerate histograms (quantile() returns None when all mass
+    sits in the first or overflow bucket — e.g. an all-cache-hit workload
+    whose sub-0.05ms latencies land entirely in the first bucket)."""
     if hist is not None and hist.count > 0:
-        return hist.quantile(0.5), hist.quantile(0.99)
+        p50, p99 = hist.quantile(0.5), hist.quantile(0.99)
+        if p50 is not None and p99 is not None:
+            return p50, p99
     return pctl(samples, 50), pctl(samples, 99)
 
 
@@ -147,10 +152,12 @@ def run_mode(graph, rounds, n_sessions, *, fuse: bool, cache: bool) -> dict:
                        ("sched.engine_ms", "engine")):
         h = snap.get(key)
         if h and h.get("count"):
-            sched[f"{label}_p50_ms"] = round(
-                obs.quantile_from_snapshot(h, 0.5), 3)
-            sched[f"{label}_p99_ms"] = round(
-                obs.quantile_from_snapshot(h, 0.99), 3)
+            for q, lab in ((0.5, "p50"), (0.99, "p99")):
+                v = obs.quantile_from_snapshot(h, q)
+                # None = degenerate histogram (all mass below the first
+                # edge, e.g. an all-cached queue): skip rather than invent
+                if v is not None:
+                    sched[f"{label}_{lab}_ms"] = round(v, 3)
     for k in svc.stats:
         svc.stats[k] -= warm_stats[k]
     return {"n_queries": n_queries,
@@ -167,14 +174,19 @@ def run_mode(graph, rounds, n_sessions, *, fuse: bool, cache: bool) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def run_obs_overhead(graph, rounds, n_sessions, reps: int = 3) -> dict:
+def run_obs_overhead(graph, rounds, n_sessions, reps: int = 9) -> dict:
     """Fused-service workload with observability on vs off, interleaved.
 
     Each rep runs the fused+cached mode twice — once with the metrics
-    registry + tracer enabled (the shipping default) and once fully
-    disabled — alternating which leg goes first so thermal/JIT drift cannot
-    systematically favor one side.  Medians across reps feed the ratio;
-    ``ci_check.sh`` and ``bench_delta.py`` gate it at <= 1.05x.
+    registry + tracer + SLO/flight/profiler judgment layer enabled (the
+    shipping default) and once fully disabled — alternating which leg goes
+    first so thermal/JIT drift cannot systematically favor one side.  The
+    gated ratio is **min over reps** of each leg: wall-clock noise on a
+    shared machine is strictly additive, so the per-leg minimum is the
+    best estimate of true cost (the ``timeit`` argument) — medians of
+    ~1.5 s reps swing ±10% run-to-run, which a 1.05x gate cannot survive.
+    Medians ride along for reference; ``ci_check.sh`` and
+    ``bench_delta.py`` gate ``ratio`` at <= 1.05x.
     """
     walls = {"on": [], "off": []}
     try:
@@ -187,13 +199,15 @@ def run_obs_overhead(graph, rounds, n_sessions, reps: int = 3) -> dict:
                 walls[which].append(res["wall_s"])
     finally:
         obs.enable()
-    on = float(np.median(walls["on"]))
-    off = float(np.median(walls["off"]))
+    on = float(min(walls["on"]))
+    off = float(min(walls["off"]))
     out = {"reps": reps,
            "enabled_wall_s": walls["on"],
            "disabled_wall_s": walls["off"],
-           "enabled_median_s": round(on, 4),
-           "disabled_median_s": round(off, 4),
+           "enabled_min_s": round(on, 4),
+           "disabled_min_s": round(off, 4),
+           "enabled_median_s": round(float(np.median(walls["on"])), 4),
+           "disabled_median_s": round(float(np.median(walls["off"])), 4),
            "ratio": round(on / off, 4) if off > 0 else 1.0}
     print(f"obs overhead: enabled {on:.3f}s vs disabled {off:.3f}s "
           f"-> {out['ratio']}x (gate <= 1.05x)")
@@ -388,9 +402,11 @@ def run_remote(scale: int, edge_factor: int, clients: int,
     svc.close()
 
     # -- spawn the server (same RMAT seed -> same graph) -------------------
+    # generous startup deadline: on a contended single-core box the child's
+    # import + graph build can be starved for minutes without being wedged
     proc, port = spawn_server(("--rmat-scale", str(scale),
                                "--edge-factor", str(edge_factor),
-                               "--workers", "2"))
+                               "--workers", "2"), timeout=300.0)
     outs = []
     procs = []
     try:
@@ -486,7 +502,7 @@ def main():
     p.add_argument("--sessions", type=int, default=12)
     p.add_argument("--rounds", type=int, default=6)
     p.add_argument("--source-pool", type=int, default=16)
-    p.add_argument("--obs-reps", type=int, default=3,
+    p.add_argument("--obs-reps", type=int, default=9,
                    help="on/off repetitions of the obs-overhead measurement")
     p.add_argument("--overload-scale", type=int, default=13,
                    help="log2 nodes of the overload-mode RMAT graph")

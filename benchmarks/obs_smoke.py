@@ -1,11 +1,15 @@
 """CI smoke for the observability subsystem: run a traced in-process
-workload through the full service stack, then validate the two export
-surfaces — the Chrome trace-event JSON schema and the metrics snapshot.
+workload through the full service stack, then validate every export
+surface — the Chrome trace-event JSON schema, the metrics snapshot, and
+(PR 10) the judgment layer: SLO health/report schemas, the engine profile
+report, and the flight-recorder debug bundle, both in-process and over a
+real socket.
 
 This is the fast-tier guard for ``repro.obs``: if an instrumentation hook
 regresses (spans stop nesting, the exporter emits malformed events, a
-counter family disappears), this fails in seconds on a tiny graph long
-before the overhead bench or a human looking at chrome://tracing would.
+counter family disappears, a bundle stops JSON-round-tripping), this fails
+in seconds on a tiny graph long before the overhead bench or a human
+looking at chrome://tracing would.
 
 Run:  PYTHONPATH=src python benchmarks/obs_smoke.py
 """
@@ -26,6 +30,9 @@ def main() -> int:
     from repro.serve.graph_service import GraphService, Workspace
 
     obs.reset()
+    # a deliberately-unmeetable objective on bfs: every bfs completion is
+    # "slow", so the flight recorder is guaranteed to capture exemplars
+    obs.SLO.set_objective("bfs", latency_ms=0.0)
 
     rng = np.random.default_rng(7)
     n, m = 512, 2048
@@ -89,8 +96,70 @@ def main() -> int:
     assert snap["engine.frontier.rounds"]["value"] >= 1
     assert "# TYPE repro_service_requests counter" in obs.dump_metrics("prom")
 
+    # --- judgment layer: SLO health / report schemas ----------------------
+    health = obs.health()
+    assert health["status"] in ("ok", "degraded", "breaching"), health
+    assert health["ops"]["bfs"]["slow"] >= 1, health["ops"]
+    assert health["ops"]["bfs"]["status"] == "breaching"
+    assert isinstance(health["reasons"], list) and health["reasons"]
+    assert health["combined"]["status"] in ("ok", "degraded", "breaching")
+    report = obs.slo_report()
+    for key in ("ops", "objectives", "default_objective", "thresholds",
+                "service", "window_s"):
+        assert key in report, f"slo_report missing {key!r}"
+    assert report["ops"]["bfs"]["n"] >= 5
+    assert report["ops"]["bfs"]["burn_rate"] > 0
+
+    # --- engine profiler: compile/execute split + report ------------------
+    prof_series = [k for k in snap if k.startswith("engine.profile.")]
+    assert prof_series, "engine profiler recorded nothing"
+    prep = obs.profile_report()
+    assert prep.startswith("engine profile"), prep
+    assert "frontier" in prep
+
+    # --- flight recorder: exemplars + bundle round trip -------------------
+    exs = obs.FLIGHT.exemplars("bfs")
+    assert exs and exs[-1]["slow"] and exs[-1]["spans"], \
+        "forced-slow bfs must leave an exemplar with span evidence"
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as f:
+        bundle = obs.debug_bundle(f.name)
+        assert json.load(open(f.name)) == bundle, "bundle != on-disk JSON"
+    assert bundle["kind"] == "repro-debug-bundle" and bundle["version"] == 1
+    for key in ("health", "slo", "metrics", "profile", "trace", "tracer",
+                "flight", "exemplars", "log_tail", "config", "versions"):
+        assert key in bundle, f"bundle missing {key!r}"
+    assert bundle["exemplars"]["bfs"]
+    from repro.obs.report import render_bundle
+    assert "flight recorder" in render_bundle(bundle)
+
+    # --- the same three surfaces over a real socket -----------------------
+    from repro.serve.client import RemoteService
+    from repro.serve.server import GraphServer
+    ws2 = Workspace()
+    ws2.put("g", g)
+    server = GraphServer(GraphService(ws2, workers=0)).start()
+    client = RemoteService(port=server.port, timeout=120.0)
+    try:
+        rs = client.session("obs-smoke-wire")
+        rp = rs.submit({"op": "bfs", "graph": "g", "params": {"source": 1}})
+        client.flush()
+        rp.result(120)
+        wh = client.health()
+        assert wh["status"] in ("ok", "degraded", "breaching")
+        assert client.slo_report()["ops"]["bfs"]["n"] >= 1
+        wb = client.debug_bundle(trace=rp.trace)
+        assert wb["kind"] == "repro-debug-bundle"
+        assert wb["exemplars"]["bfs"][-1]["spans"], \
+            "wire bundle lost exemplar span evidence"
+        assert client.profile_report().startswith("engine profile")
+    finally:
+        client.close()
+        server.shutdown()
+    obs.reset()
+
     print(f"obs smoke OK ({time.perf_counter() - t_start:.1f}s: "
-          f"{len(evs)} trace events, {len(snap)} metric series)")
+          f"{len(evs)} trace events, {len(snap)} metric series, "
+          f"{len(bundle['exemplars'])} exemplar op(s))")
     return 0
 
 

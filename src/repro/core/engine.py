@@ -83,6 +83,7 @@ from __future__ import annotations
 import functools
 import os
 import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
@@ -709,6 +710,47 @@ def push(plan, values: jax.Array, combine: str = "sum", *,
 
 _RUNNERS = {}
 
+# (runner key, exec type, leaf shapes/dtypes) signatures already run through
+# a jitted fixpoint runner: a fresh signature means the call pays a
+# trace+lower+compile, which the profiler attributes to
+# ``engine.profile.<backend>.compile_ms`` (retrace bracketing) instead of
+# ``execute_ms``
+_PROFILED_SIGS: set = set()
+
+_BACKEND_OF = {XlaExec: "xla", PallasExec: "pallas", BsrExec: "bsr",
+               FrontierExec: "frontier", ShardedExec: "sharded"}
+
+
+def _profile_sig(key, ex, init, args) -> bool:
+    """True when this (runner, exec, shapes) signature is new — i.e. the
+    call that just ran traced and compiled."""
+    leaves = jax.tree_util.tree_leaves((ex, init, args))
+    sig = (key, type(ex),
+           tuple((tuple(getattr(leaf, "shape", ())),
+                  str(getattr(leaf, "dtype", type(leaf).__name__)))
+                 for leaf in leaves))
+    if sig in _PROFILED_SIGS:
+        return False
+    _PROFILED_SIGS.add(sig)
+    return True
+
+
+def _profile_fixpoint(key, ex, init, args, t0: float,
+                      rounds: Optional[int] = None) -> None:
+    """Record one fixpoint runner call in ``engine.profile.*`` (only
+    called when obs is enabled and outside manual regions)."""
+    dt_ms = (time.perf_counter() - t0) * 1e3
+    backend = _BACKEND_OF.get(type(ex), "xla")
+    obs.profile.record_runner(backend, _profile_sig(key, ex, init, args),
+                              dt_ms)
+    if isinstance(ex, ShardedExec):
+        # per-round halo bytes are static layout facts (matches
+        # ShardPlan.halo_bytes_per_round); per-round halo *time* is not
+        # attributable from the host — the whole loop runs inside one
+        # shard_map manual region — so loop wall time is what's recorded
+        obs.profile.record_sharded(ex.d, ex.d * ex.p_halo * 4, dt_ms,
+                                   rounds=rounds)
+
 
 def _leaf_changed(o: jax.Array, n: jax.Array) -> jax.Array:
     neq = o != n
@@ -813,8 +855,13 @@ def fixpoint(plan_or_exec, body: Callable, init, *,
     ex = (plan_or_exec if isinstance(plan_or_exec, XlaExec)
           else get_exec(plan_or_exec, backend))
     manual = getattr(_MANUAL_REGION, "active", False)
+    # profiling brackets only make sense for real host-side calls: inside a
+    # manual region this function runs at trace time, where wall clocks
+    # measure tracing of the enclosing jit, not execution
+    prof = obs.REGISTRY.enabled and not manual
     if tol is not None:
         cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
+        t0 = time.perf_counter() if prof else 0.0
         out, iters = _runner(body, "tol", manual)(ex, init, jnp.int32(cap),
                                                   jnp.float32(tol), *args)
         # skip the scalar fetch when disabled; under a jax trace (vmapped
@@ -829,11 +876,23 @@ def fixpoint(plan_or_exec, body: Callable, init, *,
                 if obs_tag:
                     obs.histogram(f"engine.fixpoint.tol_iters.{obs_tag}",
                                   buckets=obs.COUNT_BUCKETS).observe(n)
+            if prof:
+                _profile_fixpoint(("tol", body), ex, init, args, t0,
+                                  rounds=n)
         return out
     if n_iter is not None:
-        return _runner(body, True, manual)(ex, init, jnp.int32(n_iter), *args)
+        t0 = time.perf_counter() if prof else 0.0
+        out = _runner(body, True, manual)(ex, init, jnp.int32(n_iter), *args)
+        if prof:
+            _profile_fixpoint(("fori", body), ex, init, args, t0,
+                              rounds=int(n_iter))
+        return out
     cap = np.iinfo(np.int32).max if max_iter is None else int(max_iter)
-    return _runner(body, False, manual)(ex, init, jnp.int32(cap), *args)
+    t0 = time.perf_counter() if prof else 0.0
+    out = _runner(body, False, manual)(ex, init, jnp.int32(cap), *args)
+    if prof:
+        _profile_fixpoint(("while", body), ex, init, args, t0)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -975,11 +1034,20 @@ def frontier_fixpoint(plan_or_exec, init, frontier, *,
     t = 0
     reg_on = obs.REGISTRY.enabled
     prev_dense: Optional[bool] = None
+    # per-round profile timing: a round's kernel completes at the *next*
+    # iteration's stats fetch (the one host sync per round), so each round
+    # is timed from just before its step dispatch to just after that fetch
+    prof_mode: Optional[str] = None
+    prof_t0 = 0.0
     with obs.TRACER.span("engine.frontier_fixpoint", rows=k, nodes=n,
                          edges=int(ex.n_edges),
                          weighted=weights is not None) as fspan:
         while t < bound:
             cnt, fe = (int(x) for x in np.asarray(stats))  # one fetch/round
+            if prof_mode is not None:
+                obs.profile.record_frontier_round(
+                    prof_mode, (time.perf_counter() - prof_t0) * 1e3)
+                prof_mode = None
             if cnt == 0:
                 break
             tj = jnp.int32(t)
@@ -992,6 +1060,8 @@ def frontier_fixpoint(plan_or_exec, init, frontier, *,
                     _C_DENSE.inc()
                 if prev_dense is not None and dense != prev_dense:
                     _C_SWITCH.inc()
+                prof_mode = "dense" if dense else "sparse"
+                prof_t0 = time.perf_counter()
             if dense:
                 rspan = obs.TRACER.span("engine.frontier.round", round=t,
                                         frontier=cnt, edges=fe, mode="dense")

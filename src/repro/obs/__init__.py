@@ -27,6 +27,19 @@ Trace ids (:func:`new_trace_id`) are minted at the request edge and ride
 the wire (``serve/wire.py``), so a remote client's id shows up on the
 server's spans, on result provenance (``ProvRecord.meta``), and filters
 :func:`export_chrome_trace` down to that client's own requests.
+
+On top of the raw instruments sits the **judgment layer** (PR 10):
+
+* :data:`SLO` (:class:`~repro.obs.slo.SLOTracker`) — rolling-window
+  latency objectives, error budgets, burn rates; :func:`health` is the
+  ``ok|degraded|breaching`` verdict, :func:`slo_report` the full window;
+* :data:`FLIGHT` (:class:`~repro.obs.flight.FlightRecorder`) — exemplars
+  of slow/errored/expired requests frozen at completion time (they
+  survive trace-ring wrap) and :func:`debug_bundle` postmortem artifacts;
+* :mod:`repro.obs.profile` — ``engine.profile.*`` instruments (compile vs
+  execute per backend, frontier round phases, sharded halo traffic) and
+  :func:`profile_report`; ``python -m repro.obs.report`` renders the
+  dashboard against a live server or a saved bundle.
 """
 
 from __future__ import annotations
@@ -34,20 +47,27 @@ from __future__ import annotations
 import os
 from typing import Any, Dict, Optional, Union
 
+from . import log as _log
 from .log import StructLogger, format_event, get_logger
 from .metrics import (BYTE_BUCKETS, COUNT_BUCKETS, DEFAULT_BUCKETS_MS,
                       Counter, Gauge, Histogram, Registry,
                       quantile_from_snapshot)
 from .trace import NOOP_SPAN, Span, Tracer
+from .slo import Objective, SLOTracker
+from .flight import FlightRecorder
+from . import profile
 
 __all__ = [
-    "REGISTRY", "TRACER", "Registry", "Tracer", "Span", "NOOP_SPAN",
+    "REGISTRY", "TRACER", "SLO", "FLIGHT",
+    "Registry", "Tracer", "Span", "NOOP_SPAN",
     "Counter", "Gauge", "Histogram", "StructLogger",
+    "Objective", "SLOTracker", "FlightRecorder", "profile",
     "DEFAULT_BUCKETS_MS", "COUNT_BUCKETS", "BYTE_BUCKETS",
     "enable", "disable", "enabled",
     "counter", "gauge", "histogram", "quantile_from_snapshot",
     "span", "instant", "add_complete", "new_trace_id", "current_trace",
     "dump_metrics", "export_chrome_trace", "reset",
+    "health", "slo_report", "debug_bundle", "profile_report",
     "get_logger", "format_event", "log",
 ]
 
@@ -63,6 +83,18 @@ _ON = _env_flag("REPRO_OBS", True)
 
 REGISTRY = Registry(enabled=_ON)
 TRACER = Tracer(enabled=_ON)
+
+#: process-global SLO tracker and flight recorder (PR 10's judgment layer);
+#: both follow REGISTRY.enabled — no separate switch
+SLO = SLOTracker(REGISTRY)
+FLIGHT = FlightRecorder(TRACER, REGISTRY, slo=SLO)
+
+# account trace-ring overflow in the metrics plane (wired here rather than
+# inside trace.py to keep that module free of a metrics import)
+TRACER.drop_hook = REGISTRY.counter("trace.dropped").inc
+
+# bind the engine-profiling instruments to the global registry
+profile.bind(REGISTRY)
 
 
 def enable(*, metrics: bool = True, tracing: bool = True) -> None:
@@ -112,10 +144,38 @@ def export_chrome_trace(path: Optional[str] = None, *,
     return TRACER.export_chrome_trace(path, trace=trace)
 
 
+def health() -> Dict[str, Any]:
+    """Rolling-window SLO verdict: ``ok|degraded|breaching`` overall and
+    per op (see :meth:`repro.obs.slo.SLOTracker.health`)."""
+    return SLO.health()
+
+
+def slo_report() -> Dict[str, Any]:
+    """Full SLO window: per-op rates, burn, quantiles, objectives."""
+    return SLO.report()
+
+
+def debug_bundle(path: Optional[str] = None, *,
+                 trace: Optional[str] = None) -> Dict[str, Any]:
+    """Postmortem artifact: metrics, trace, exemplars, SLO state, profile
+    report, log tail, config/versions (see
+    :meth:`repro.obs.flight.FlightRecorder.debug_bundle`)."""
+    return FLIGHT.debug_bundle(path, trace=trace)
+
+
+def profile_report() -> str:
+    """Text table of the ``engine.profile.*`` instruments."""
+    return profile.profile_report(REGISTRY.snapshot())
+
+
 def reset() -> None:
-    """Zero all metric values and drop buffered spans (test hygiene)."""
+    """Zero all metric values, drop buffered spans, and clear SLO windows,
+    flight-recorder exemplars, and the log tail (test hygiene)."""
     REGISTRY.reset()
     TRACER.clear()
+    SLO.reset()
+    FLIGHT.reset()
+    _log.clear_tail()
 
 
 #: module-level structured logger for ad-hoc events

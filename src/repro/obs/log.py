@@ -15,6 +15,13 @@ embedding application already configured one) and sets its level from
 ``warning``, so routine fallback notices stay quiet in tests and benches).
 The underlying stdlib loggers stay reachable via ``logging.getLogger`` for
 tests and embedders who want their own handlers or levels.
+
+The module also keeps a small in-process **tail buffer** (a bounded deque
+fed by a dedicated handler on the ``"repro"`` root): the last few hundred
+records that passed the configured level, as plain dicts.  Debug bundles
+(:meth:`repro.obs.flight.FlightRecorder.debug_bundle`) embed this tail so a
+postmortem artifact carries the log lines surrounding the incident without
+anyone having had to redirect stderr in advance.
 """
 
 from __future__ import annotations
@@ -22,9 +29,11 @@ from __future__ import annotations
 import logging
 import os
 import threading
-from typing import Any, Dict
+from collections import deque
+from typing import Any, Dict, List, Optional
 
-__all__ = ["get_logger", "StructLogger", "format_event"]
+__all__ = ["get_logger", "StructLogger", "format_event", "tail",
+           "clear_tail"]
 
 _LEVELS = {"debug": logging.DEBUG, "info": logging.INFO,
            "warning": logging.WARNING, "warn": logging.WARNING,
@@ -32,6 +41,36 @@ _LEVELS = {"debug": logging.DEBUG, "info": logging.INFO,
 
 _configured = False
 _config_lock = threading.Lock()
+
+# bounded in-process record tail for debug bundles; records that pass the
+# configured "repro" level land here as plain dicts regardless of what
+# stream/file handlers the embedder installed
+_TAIL: deque = deque(maxlen=256)
+
+
+class _TailHandler(logging.Handler):
+    """Appends every record to the bounded module tail; never raises."""
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            _TAIL.append({"unix_ts": record.created,
+                          "level": record.levelname,
+                          "logger": record.name,
+                          "message": record.getMessage()})
+        except Exception:
+            pass
+
+
+def tail(n: Optional[int] = None) -> List[Dict[str, Any]]:
+    """Last ``n`` (default: all buffered) structured-log records, oldest
+    first, as plain JSON-ready dicts."""
+    _ensure_configured()
+    out = list(_TAIL)
+    return out[-n:] if n is not None else out
+
+
+def clear_tail() -> None:
+    _TAIL.clear()
 
 
 def _ensure_configured() -> None:
@@ -47,6 +86,10 @@ def _ensure_configured() -> None:
             h.setFormatter(logging.Formatter(
                 "%(asctime)s %(levelname)s %(name)s :: %(message)s"))
             root.addHandler(h)
+        # the tail handler is additive: installed even when the embedder
+        # brought its own handlers, so debug bundles always have a log tail
+        if not any(isinstance(h, _TailHandler) for h in root.handlers):
+            root.addHandler(_TailHandler())
         lvl = os.environ.get("REPRO_OBS_LOG", "warning").strip().lower()
         root.setLevel(_LEVELS.get(lvl, logging.WARNING))
         _configured = True

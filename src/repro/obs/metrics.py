@@ -163,9 +163,16 @@ class Histogram:
         return self._sum
 
     def quantile(self, q: float) -> Optional[float]:
-        """Interpolated quantile from bucket counts; None when empty.
+        """Interpolated quantile from bucket counts; None when degenerate.
 
-        Values in the +Inf bucket clamp to the last finite edge — pick the
+        Returns None when the histogram is empty, when every observation
+        sits in the zero-anchored first bucket, or when every observation
+        overflowed into +Inf — in all three cases no real pair of edges
+        brackets the data and any interpolated number (a misleading
+        0-adjacent value, or the clamped last edge) would be fabricated.
+        Callers fall back to their sample lists (``bench_service.py``) or
+        report the absence.  Values in the +Inf bucket of an otherwise
+        populated histogram still clamp to the last finite edge — pick the
         bucket layout so the tail you care about is inside it.
         """
         with self._lock:
@@ -189,6 +196,13 @@ class Histogram:
 def _quantile(edges: Sequence[float], counts: Sequence[int], n: int,
               q: float) -> Optional[float]:
     if n <= 0:
+        return None
+    if counts[0] >= n or counts[-1] >= n:
+        # Degenerate mass: everything in the zero-anchored first bucket or
+        # everything in the +Inf overflow.  Neither has a real edge pair
+        # around the data, so interpolation would fabricate a value (a
+        # misleading near-zero, or the clamped last edge).  A single
+        # interior bucket keeps interpolating — both its edges are real.
         return None
     target = max(min(float(q), 1.0), 0.0) * n
     cum = 0

@@ -127,12 +127,24 @@ class Span:
 
 
 class Tracer:
-    """Bounded ring buffer of finished spans + the context machinery."""
+    """Bounded ring buffer of finished spans + the context machinery.
+
+    Ring overflow is *accounted*, not silent: every span evicted to make
+    room bumps :attr:`dropped` (visible in :meth:`stats` and in the
+    ``metadata`` block of :meth:`export_chrome_trace`), and the optional
+    :attr:`drop_hook` callable fires once per drop — the obs package wires
+    it to the ``trace.dropped`` registry counter so exports and dashboards
+    can tell "quiet system" from "ring wrapped and ate the evidence".
+    """
 
     def __init__(self, enabled: bool = True, capacity: int = 65536):
         self.enabled = enabled
         self._lock = threading.Lock()
         self._events: deque = deque(maxlen=capacity)
+        self._dropped = 0
+        #: optional zero-arg callable invoked (outside the ring lock) once
+        #: per dropped span; wired to a registry counter by ``obs``
+        self.drop_hook = None
 
     # -- ids / context ------------------------------------------------------
     def new_trace_id(self) -> str:
@@ -189,15 +201,35 @@ class Tracer:
 
     def _append(self, ev: Tuple) -> None:
         with self._lock:
+            dropped = (self._events.maxlen is not None
+                       and len(self._events) == self._events.maxlen)
+            if dropped:
+                self._dropped += 1
             self._events.append(ev)
+        if dropped and self.drop_hook is not None:
+            self.drop_hook()
 
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
+            self._dropped = 0
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._events)
+
+    @property
+    def dropped(self) -> int:
+        """Spans evicted by ring overflow since the last :meth:`clear`."""
+        return self._dropped
+
+    def stats(self) -> Dict[str, Any]:
+        """Ring accounting: ``{enabled, capacity, buffered, dropped}``."""
+        with self._lock:
+            return {"enabled": bool(self.enabled),
+                    "capacity": self._events.maxlen,
+                    "buffered": len(self._events),
+                    "dropped": self._dropped}
 
     # -- export -------------------------------------------------------------
     def export_chrome_trace(self, path: Optional[str] = None, *,
@@ -212,6 +244,39 @@ class Tracer:
         """
         with self._lock:
             evs = list(self._events)
+            dropped = self._dropped
+        out, tids = self._render(evs, trace)
+        pid = os.getpid()
+        for ident, small in tids.items():
+            out.append({"name": "thread_name", "ph": "M", "pid": pid,
+                        "tid": small,
+                        "args": {"name": f"thread-{ident}"}})
+        doc = {"traceEvents": out, "displayTimeUnit": "ms",
+               "metadata": {"dropped_events": dropped,
+                            "capacity": self._events.maxlen,
+                            "buffered": len(evs)}}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc
+
+    def events_for_trace(self, trace: str,
+                         limit: Optional[int] = None) -> list:
+        """Chrome-style event dicts for one trace id, oldest first.
+
+        The flight recorder calls this *at request completion time* to
+        freeze a slow/failed request's span tree into an exemplar before
+        ring wrap can evict it.  ``limit`` keeps only the newest N events.
+        """
+        with self._lock:
+            evs = list(self._events)
+        out, _ = self._render(evs, trace)
+        if limit is not None and len(out) > limit:
+            out = out[-limit:]
+        return out
+
+    def _render(self, evs, trace):
+        """Event tuples -> Chrome event dicts (+ tid small-int mapping)."""
         pid = os.getpid()
         tids: Dict[int, int] = {}
         out = []
@@ -237,15 +302,7 @@ class Tracer:
             else:
                 ev["s"] = "t"
             out.append(ev)
-        for ident, small in tids.items():
-            out.append({"name": "thread_name", "ph": "M", "pid": pid,
-                        "tid": small,
-                        "args": {"name": f"thread-{ident}"}})
-        doc = {"traceEvents": out, "displayTimeUnit": "ms"}
-        if path is not None:
-            with open(path, "w") as f:
-                json.dump(doc, f)
-        return doc
+        return out, tids
 
 
 def _jsonable(v: Any) -> Any:

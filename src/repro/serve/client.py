@@ -316,6 +316,38 @@ class RemoteService:
                 json.dump(doc, f)
         return doc
 
+    def health(self) -> Dict[str, Any]:
+        """Server-side SLO verdict: ``{"status": "ok|degraded|breaching",
+        "ops": {...}, "reasons": [...]}`` (see ``repro.obs.slo``)."""
+        return self._rpc("health")["health"]
+
+    def slo_report(self) -> Dict[str, Any]:
+        """Server-side SLO window report: per-op rates, burn rate,
+        windowed quantiles, configured objectives."""
+        return self._rpc("slo_report")["report"]
+
+    def debug_bundle(self, path: Optional[str] = None, *,
+                     trace: Optional[str] = None) -> Dict[str, Any]:
+        """Fetch the server's postmortem bundle (metrics, Chrome trace,
+        flight-recorder exemplars, SLO state, profile report, log tail).
+
+        ``trace`` narrows the embedded Chrome trace to one trace id;
+        ``path`` writes the bundle JSON to a local file — the artifact
+        ``python -m repro.obs.report --bundle <path>`` renders.
+        """
+        bundle = self._rpc("debug_bundle", trace=trace)["bundle"]
+        if path is not None:
+            import json
+            with open(path, "w") as f:
+                json.dump(bundle, f)
+        return bundle
+
+    def profile_report(self) -> str:
+        """Text table of the server's ``engine.profile.*`` instruments,
+        rendered locally from the shipped metrics snapshot."""
+        from ..obs.profile import profile_report
+        return profile_report(self.metrics())
+
     def shutdown_server(self) -> None:
         """Ask the server process to drain and exit (if it allows it).
 

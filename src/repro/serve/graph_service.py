@@ -868,7 +868,9 @@ class GraphService:
 
         ``trace`` attaches a trace id (e.g. one extracted from the wire) to
         the request's spans and result provenance; without one the request
-        inherits the submitting thread's active trace, if any.
+        inherits the submitting thread's active trace, or mints a fresh id
+        (so flight-recorder exemplars always carry span evidence — the
+        remote client does the same on its side of the wire).
         """
         op = request.get("op")
         if op not in _OPS:
@@ -878,11 +880,17 @@ class GraphService:
             p.trace = trace
         elif p.trace is None:
             p.trace = obs.current_trace()
+        if p.trace is None and obs.TRACER.enabled:
+            p.trace = obs.new_trace_id()
         self._bump("requests")
         with obs.TRACER.span("service.submit", trace=p.trace, op=op,
                              session=session.name):
             q = self._prepare(p)
             if q is None:
+                # preparation error resolved p without touching the
+                # scheduler, so its completion seam never fires — feed the
+                # flight recorder here for error-exemplar completeness
+                obs.FLIGHT.record_pending(p, op=op, session=session.name)
                 return p
             # cache fast path: a repeated trial-and-error query resolves at
             # submit, skipping admission and the scheduler round trip — it
@@ -899,6 +907,9 @@ class GraphService:
                 obs.TRACER.instant("service.cache_hit_submit", trace=p.trace,
                                    op=op, session=session.name)
                 self._finish(p, hit, cached=True)
+                # submit-time cache hits also bypass the scheduler's
+                # completion seam; record so SLO windows count every request
+                obs.FLIGHT.record_pending(p, op=op, session=session.name)
                 return p
             self.scheduler.submit(q)
         return p

@@ -147,6 +147,15 @@ class AdmissionPolicy:
     max_queue_depth: int = 1024
     #: floor for the retry-after estimate (seconds)
     min_retry_after_s: float = 0.01
+    #: opt-in SLO-aware shedding: while ``obs.SLO`` reports the submitted
+    #: op (or the service overall) as *breaching*, both admission bounds
+    #: shrink by :attr:`shed_factor` so backlog drains instead of piling up
+    #: behind an objective that is already blown.  Off by default — turning
+    #: observability into admission behavior is a deliberate choice.
+    slo_shed: bool = False
+    #: multiplier applied to ``max_inflight``/``max_queue_depth`` while
+    #: shedding (floored at 1 so the service never fully closes)
+    shed_factor: float = 0.5
 
     def quota_for(self, session: str) -> int:
         return int(self.inflight_overrides.get(session, self.max_inflight))

@@ -204,25 +204,38 @@ class Scheduler:
     def submit(self, q: QueuedRequest) -> None:
         """Enqueue or reject; rejection raises before the queue is touched."""
         adm = self.policy.admission
+        # opt-in SLO shedding: while the op (or the service overall) is
+        # breaching its burn-rate threshold, tighten both admission bounds
+        # so backlog drains instead of growing — observability closing the
+        # loop into serving.  should_shed() is a cached verdict read, not a
+        # health computation, so the common healthy case stays cheap.
+        shed = adm.slo_shed and obs.SLO.should_shed(q.op)
+        quota = adm.quota_for(q.session)
+        depth_bound = adm.max_queue_depth
+        if shed:
+            quota = max(1, int(quota * adm.shed_factor))
+            depth_bound = max(1, int(depth_bound * adm.shed_factor))
         with self._cond:
             st = self._state(q.session)
-            quota = adm.quota_for(q.session)
             if st.inflight >= quota:
                 st.rejected += 1
                 retry = max(adm.min_retry_after_s,
                             st.inflight * self._est_ms / 1e3)
-                self._reject(q, "quota", retry)
+                self._reject(q, "slo_shed" if shed else "quota", retry)
                 raise RejectedError(
                     f"session {q.session!r} is at its in-flight quota "
-                    f"({quota})", retry)
-            if self._total_queued >= adm.max_queue_depth:
+                    f"({quota})" + (" [slo shedding active]" if shed
+                                    else ""), retry)
+            if self._total_queued >= depth_bound:
                 st.rejected += 1
                 retry = max(adm.min_retry_after_s,
                             self._total_queued * self._est_ms / 1e3)
-                self._reject(q, "queue_depth", retry)
+                self._reject(q, "slo_shed" if shed else "queue_depth",
+                             retry)
                 raise RejectedError(
                     f"service backlog is at its queue-depth bound "
-                    f"({adm.max_queue_depth})", retry)
+                    f"({depth_bound})" + (" [slo shedding active]" if shed
+                                          else ""), retry)
             q.seq = self._seq
             self._seq += 1
             st.inflight += 1
@@ -345,6 +358,13 @@ class Scheduler:
     # -- accounting ---------------------------------------------------------
     def _done(self, q: QueuedRequest, engine_ms: float,
               completed: bool = True) -> None:
+        # every caller resolves q.pending before calling _done (cache hits,
+        # group execution, error paths, expiry), so this is the single
+        # completion seam: the flight recorder sees each request exactly
+        # once with its final latency/outcome, feeds the SLO window, and
+        # captures an exemplar if the request was slow, errored, or expired
+        obs.FLIGHT.record_completion(q, engine_ms=engine_ms,
+                                     expired=not completed)
         fair = self.policy.fair
         with self._cond:
             st = self._state(q.session)

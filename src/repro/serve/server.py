@@ -259,6 +259,21 @@ class _Connection:
         return {"trace_events":
                 obs.export_chrome_trace(trace=msg.get("trace"))}
 
+    def _op_health(self, req_id: int, msg: dict) -> dict:
+        """Rolling-window SLO verdict (``ok|degraded|breaching`` overall
+        and per op, with machine-readable reasons)."""
+        return {"health": obs.health()}
+
+    def _op_slo_report(self, req_id: int, msg: dict) -> dict:
+        """Full SLO window: per-op rates, burn, quantiles, objectives."""
+        return {"report": obs.slo_report()}
+
+    def _op_debug_bundle(self, req_id: int, msg: dict) -> dict:
+        """Postmortem bundle: metrics, trace (optionally filtered to
+        ``trace``), flight-recorder exemplars, SLO state, profile report,
+        log tail, config/versions — one plain JSON-safe tree."""
+        return {"bundle": obs.debug_bundle(trace=msg.get("trace"))}
+
     def _op_session_stats(self, req_id: int, msg: dict) -> dict:
         key = f"{self.conn_id}/{msg['session']}"
         return {"stats": self.server.service.session_stats(key)}

@@ -347,3 +347,433 @@ def test_dump_metrics_formats():
     assert "# TYPE" in obs.dump_metrics("prom")
     with pytest.raises(ValueError):
         obs.dump_metrics("xml")
+
+
+# ---------------------------------------------------------------------------
+# quantile edge cases (PR 10: None instead of fabricated values)
+# ---------------------------------------------------------------------------
+
+
+def test_quantile_none_on_degenerate_mass():
+    reg = Registry()
+    first = reg.histogram("deg.first", buckets=(10.0, 20.0))
+    first.observe(5.0)                 # all mass in the zero-anchored bucket
+    assert first.quantile(0.5) is None
+    over = reg.histogram("deg.over", buckets=(10.0, 20.0))
+    over.observe(99.0)                 # all mass in the +Inf overflow
+    assert over.quantile(0.5) is None
+    assert over.quantile(0.01) is None
+
+
+def test_quantile_none_on_single_edge_histogram():
+    reg = Registry()
+    h = reg.histogram("deg.single", buckets=(10.0,))
+    assert h.quantile(0.5) is None     # empty
+    h.observe(5.0)                     # below the only edge -> first bucket
+    assert h.quantile(0.5) is None
+    h2 = reg.histogram("deg.single2", buckets=(10.0,))
+    h2.observe(50.0)                   # above the only edge -> overflow
+    assert h2.quantile(0.5) is None
+
+
+def test_quantile_recovers_once_mass_is_bracketed():
+    reg = Registry()
+    h = reg.histogram("deg.mixed", buckets=(10.0, 20.0, 40.0))
+    h.observe(5.0)
+    assert h.quantile(0.99) is None
+    h.observe(15.0)                    # now a real edge pair brackets data
+    p = h.quantile(0.99)
+    assert p is not None and 0.0 < p <= 20.0
+    # snapshot-side helper agrees with the live instrument
+    snap = reg.snapshot()
+    assert quantile_from_snapshot(snap["deg.mixed"], 0.99) == p
+    assert quantile_from_snapshot(snap["deg.first"], 0.5) is None \
+        if "deg.first" in snap else True
+
+
+# ---------------------------------------------------------------------------
+# trace ring drop accounting (PR 10)
+# ---------------------------------------------------------------------------
+
+
+def test_ring_wrap_counts_drops():
+    reg = Registry()
+    tr = Tracer(capacity=8)
+    tr.drop_hook = reg.counter("trace.dropped").inc
+    for i in range(100):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr) == 8
+    assert tr.dropped == 92
+    st = tr.stats()
+    assert st["capacity"] == 8
+    assert st["buffered"] == 8
+    assert st["dropped"] == 92
+    assert reg.counter("trace.dropped").value == 92
+    doc = tr.export_chrome_trace()
+    assert doc["metadata"]["dropped_events"] == 92
+    assert doc["metadata"]["capacity"] == 8
+    tr.clear()
+    assert tr.dropped == 0
+    assert tr.stats()["dropped"] == 0
+
+
+def test_global_tracer_drop_hook_is_wired():
+    # obs/__init__ must route ring overflow into the trace.dropped counter
+    assert obs.TRACER.drop_hook is not None
+
+
+# ---------------------------------------------------------------------------
+# SLO tracker: window math, hysteresis, shedding (PR 10)
+# ---------------------------------------------------------------------------
+
+from repro.obs.slo import Objective, SLOTracker  # noqa: E402
+
+
+def _slo_tracker(clk, **kw):
+    defaults = dict(window_s=10.0, n_buckets=5,
+                    default=Objective(latency_ms=100.0, error_budget=0.1),
+                    clear_ticks=2, clock=lambda: clk[0])
+    defaults.update(kw)
+    return SLOTracker(Registry(), **defaults)
+
+
+def test_slo_burn_rate_and_window_rotation():
+    clk = [0.0]
+    trk = _slo_tracker(clk)
+    for _ in range(5):
+        trk.observe("bfs", 10.0)       # within the 100ms objective
+    for _ in range(5):
+        trk.observe("bfs", 500.0)      # blown
+    h = trk.health()
+    # bad fraction 0.5 over a 0.1 budget -> burn rate 5 -> breaching
+    assert h["ops"]["bfs"]["burn_rate"] == pytest.approx(5.0)
+    assert h["ops"]["bfs"]["status"] == "breaching"
+    assert h["status"] == "breaching"
+    assert any("bfs" in r for r in h["reasons"])
+    # t=6s (bucket width 2s): old data still inside the 10s window
+    clk[0] = 6.0
+    trk.observe("bfs", 10.0)
+    assert trk.health()["ops"]["bfs"]["n"] == 11
+    # t=11s: the t=0 bucket rotated out; only the t=6 observation remains
+    clk[0] = 11.0
+    h = trk.health()
+    assert h["ops"]["bfs"]["n"] == 1
+    assert h["ops"]["bfs"]["burn_rate"] == 0.0
+
+
+def test_slo_burn_across_bucket_boundary():
+    clk = [0.0]
+    trk = _slo_tracker(clk)
+    # spread bad completions across two adjacent buckets: the window
+    # aggregates them into one burn rate
+    trk.observe("pr", 500.0)
+    clk[0] = 2.5                       # next bucket
+    trk.observe("pr", 500.0)
+    trk.observe("pr", 10.0)
+    trk.observe("pr", 10.0)
+    h = trk.health()
+    assert h["ops"]["pr"]["n"] == 4
+    assert h["ops"]["pr"]["bad_fraction"] == pytest.approx(0.5)
+    assert h["ops"]["pr"]["burn_rate"] == pytest.approx(5.0)
+
+
+def test_slo_verdict_hysteresis():
+    clk = [0.0]
+    trk = _slo_tracker(clk)
+    for _ in range(10):
+        trk.observe("bfs", 500.0)
+    assert trk.health()["ops"]["bfs"]["status"] == "breaching"  # immediate
+    clk[0] = 12.0                      # slow burst fully rotated out
+    trk.observe("bfs", 10.0)           # healthy traffic in the new window
+    h1 = trk.health()
+    assert h1["ops"]["bfs"]["burn_rate"] == 0.0       # raw data is clean...
+    assert h1["ops"]["bfs"]["status"] == "breaching"  # ...verdict lags
+    assert h1["status"] == "breaching"
+    h2 = trk.health()                  # clear_ticks=2 -> second clean eval
+    assert h2["ops"]["bfs"]["status"] == "ok"
+    assert h2["status"] == "ok"
+
+
+def test_slo_shedding_is_per_op_unless_combined_burn():
+    clk = [0.0]
+    trk = _slo_tracker(clk)
+    trk.set_objective("bfs", latency_ms=1.0, error_budget=0.01)
+    assert not trk.should_shed("bfs")
+    for _ in range(10):
+        trk.observe("bfs", 50.0)       # every bfs blown
+    for _ in range(90):
+        trk.observe("pagerank", 10.0)  # plenty of healthy traffic elsewhere
+    clk[0] += 2.0                      # invalidate the shed cache
+    assert trk.should_shed("bfs")
+    # combined bad fraction is 0.1 == default budget -> burn 1.0, below
+    # breach: the healthy op is NOT shed
+    assert not trk.should_shed("pagerank")
+    h = trk.health()
+    assert h["combined"]["status"] != "breaching"
+    assert h["ops"]["bfs"]["status"] == "breaching"
+
+
+def test_slo_tick_folds_snapshot_deltas():
+    reg = Registry()
+    trk = SLOTracker(reg, window_s=10.0, n_buckets=5)
+    reg.counter("service.requests").inc(5)
+    assert trk.tick()["service.requests"] == 5
+    reg.counter("service.requests").inc(3)
+    assert trk.tick()["service.requests"] == 3       # delta, not absolute
+    assert trk.health()["service"]["service.requests"] == 8
+    reg.reset()
+    # a registry reset between ticks reads as "no traffic", never negative
+    assert trk.tick()["service.requests"] == 0
+
+
+def test_slo_set_objective_partial_override():
+    clk = [0.0]
+    trk = _slo_tracker(clk)
+    obj = trk.set_objective("bfs", latency_ms=50.0)
+    assert obj.latency_ms == 50.0
+    assert obj.error_budget == 0.1     # inherited from the default
+    obj2 = trk.set_objective("bfs", error_budget=0.02)
+    assert obj2.latency_ms == 50.0     # previous override kept
+    assert obj2.error_budget == 0.02
+    assert trk.objective_for("pagerank").latency_ms == 100.0
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: exemplar capture + debug bundle (PR 10)
+# ---------------------------------------------------------------------------
+
+from repro.serve.graph_service import DeadlineExpired, GraphService  # noqa: E402
+from repro.serve.policy import (AdmissionPolicy, RejectedError,  # noqa: E402
+                                SchedulerPolicy)
+
+
+def _flight_service():
+    svc = GraphService(workers=0)
+    svc.workspace.put("g", small_graph())
+    return svc
+
+
+def test_flight_exemplar_on_slow_completion():
+    obs.reset()
+    try:
+        obs.SLO.set_objective("pagerank", latency_ms=0.0)  # everything slow
+        svc = _flight_service()
+        s = svc.session("alice")
+        p = s.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 2}})
+        svc.flush()
+        p.result()
+        exs = obs.FLIGHT.exemplars("pagerank")
+        assert exs, "slow completion must capture an exemplar"
+        ex = exs[-1]
+        assert ex["outcome"] == "ok" and ex["slow"] is True
+        assert ex["session"] == "alice"
+        assert ex["latency_ms"] is not None and ex["latency_ms"] > 0
+        assert ex["slo_latency_ms"] == 0.0
+        assert ex["spans"], "span tree frozen at completion time"
+        names = {e["name"] for e in ex["spans"]}
+        assert "service.submit" in names
+        assert "counters_delta" in ex
+        svc.close()
+    finally:
+        obs.reset()
+
+
+def test_flight_exemplar_on_error_and_expired():
+    obs.reset()
+    try:
+        svc = _flight_service()
+        s = svc.session("bob")
+        # error path: input resolution fails at submit (bypasses scheduler)
+        pe = s.submit({"op": "pagerank", "graph": "no-such-graph",
+                       "params": {}})
+        with pytest.raises(Exception):
+            pe.result()
+        exs = obs.FLIGHT.exemplars("pagerank")
+        assert any(e["outcome"] == "error" and e["error"] for e in exs)
+        # expired path: deadline already blown when the scheduler dequeues
+        px = s.submit({"op": "pagerank", "graph": "g",
+                       "params": {"n_iter": 2}, "deadline_ms": 0})
+        svc.flush()
+        with pytest.raises(DeadlineExpired):
+            px.result()
+        exs = obs.FLIGHT.exemplars("pagerank")
+        assert any(e["outcome"] == "expired" for e in exs)
+        # fast, healthy requests capture nothing
+        before = obs.FLIGHT.stats()["exemplars"]
+        pg = s.submit({"op": "pagerank", "graph": "g",
+                       "params": {"n_iter": 2}})
+        svc.flush()
+        pg.result()
+        assert obs.FLIGHT.stats()["exemplars"] == before
+        svc.close()
+    finally:
+        obs.reset()
+
+
+def _fake_done_pending(latency_ms=5.0, error=None):
+    return type("P", (), {"done": True, "error": error, "trace": None,
+                          "latency_ms": latency_ms, "cached": False,
+                          "fused": False})()
+
+
+def test_flight_store_is_bounded_per_op():
+    obs.reset()
+    saved = obs.FLIGHT.min_capture_interval_s
+    obs.FLIGHT.min_capture_interval_s = 0.0
+    try:
+        cap = obs.FLIGHT.per_op_capacity
+        obs.SLO.set_objective("bfs", latency_ms=0.0)
+        for i in range(cap + 5):
+            obs.FLIGHT.record_pending(_fake_done_pending(), op="bfs",
+                                      session="s")
+        assert len(obs.FLIGHT.exemplars("bfs")) == cap
+    finally:
+        obs.FLIGHT.min_capture_interval_s = saved
+        obs.reset()
+
+
+def test_flight_throttles_slow_captures_not_errors():
+    obs.reset()
+    try:
+        obs.SLO.set_objective("bfs", latency_ms=0.0)
+        # a burst of slow-but-successful completions: only the first is
+        # frozen inside the min-capture interval, the rest are counted
+        for _ in range(5):
+            obs.FLIGHT.record_pending(_fake_done_pending(), op="bfs",
+                                      session="s")
+        assert len(obs.FLIGHT.exemplars("bfs")) == 1
+        assert obs.FLIGHT.stats()["throttled"] == 4
+        # errors are exempt from the rate limit
+        for _ in range(3):
+            obs.FLIGHT.record_pending(
+                _fake_done_pending(error=ValueError("boom")), op="bfs",
+                session="s")
+        errs = [e for e in obs.FLIGHT.exemplars("bfs")
+                if e["outcome"] == "error"]
+        assert len(errs) == 3
+        assert obs.FLIGHT.stats()["throttled"] == 4
+    finally:
+        obs.reset()
+
+
+def test_debug_bundle_round_trip_survives_ring_wrap(tmp_path):
+    obs.reset()
+    try:
+        obs.SLO.set_objective("bfs", latency_ms=0.0)
+        svc = _flight_service()
+        s = svc.session("carol")
+        p = s.submit({"op": "bfs", "graph": "g", "params": {"source": 0}})
+        svc.flush()
+        p.result()
+        ex = obs.FLIGHT.exemplars("bfs")[-1]
+        assert ex["spans"] and ex["trace"]
+        # wrap the ring: pad events evict every span of the bfs request
+        cap = obs.TRACER._events.maxlen
+        t0 = time.perf_counter()
+        for _ in range(cap + 1):
+            obs.add_complete("pad", t0, t0)
+        assert obs.TRACER.dropped > 0
+        live = obs.export_chrome_trace(trace=ex["trace"])["traceEvents"]
+        assert [e for e in live if e["ph"] == "X"] == []  # ring forgot it
+        assert obs.FLIGHT.exemplars("bfs")[-1]["spans"]   # recorder didn't
+        # bundle: exact JSON round trip through disk
+        path = tmp_path / "bundle.json"
+        bundle = obs.debug_bundle(str(path), trace=ex["trace"])
+        assert json.loads(path.read_text()) == bundle
+        assert bundle["kind"] == "repro-debug-bundle"
+        assert bundle["health"]["status"] in ("ok", "degraded", "breaching")
+        assert bundle["slo"]["ops"]["bfs"]["n"] >= 1
+        assert bundle["tracer"]["dropped"] > 0
+        assert bundle["trace"]["metadata"]["dropped_events"] > 0
+        assert bundle["exemplars"]["bfs"][-1]["spans"]
+        assert bundle["config"]["obs_enabled"] is True
+        # and it renders through the dashboard
+        from repro.obs.report import render_bundle
+        text = render_bundle(bundle)
+        assert "bfs" in text
+        assert "flight recorder" in text
+        assert "spans=" in text
+        svc.close()
+    finally:
+        obs.reset()
+
+
+def test_slo_shed_tightens_admission():
+    obs.reset()
+    try:
+        pol = SchedulerPolicy(admission=AdmissionPolicy(
+            max_inflight=8, max_queue_depth=100,
+            slo_shed=True, shed_factor=0.125))
+        svc = GraphService(workers=0, policy=pol)
+        svc.workspace.put("g", small_graph())
+        s = svc.session("greedy")
+        # no breach -> full quota: several queued submissions are fine
+        for i in range(3):
+            s.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 2 + i}})
+        svc.flush()
+        # blow the objective so pagerank starts breaching
+        obs.SLO.set_objective("pagerank", latency_ms=0.0, error_budget=0.01)
+        p = s.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 9}})
+        svc.flush()
+        p.result()
+        # refresh the verdict (should_shed serves a 1s-cached health view)
+        assert obs.SLO.health()["ops"]["pagerank"]["status"] == "breaching"
+        # quota shrinks to max(1, 8*0.125) = 1: second in-flight rejects
+        s.submit({"op": "pagerank", "graph": "g", "params": {"n_iter": 10}})
+        with pytest.raises(RejectedError) as ei:
+            s.submit({"op": "pagerank", "graph": "g",
+                      "params": {"n_iter": 11}})
+        assert "slo shedding" in str(ei.value)
+        svc.flush()
+        svc.close()
+    finally:
+        obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# engine profiler (PR 10)
+# ---------------------------------------------------------------------------
+
+
+def test_profile_compile_execute_split_and_report():
+    obs.reset()
+    g = small_graph()
+    A.pagerank(g, n_iter=3)
+    A.pagerank(g, n_iter=3)            # same signature: execute only
+    snap = obs.dump_metrics()
+    prof = {k: v for k, v in snap.items()
+            if k.startswith("engine.profile.") and v["type"] == "histogram"}
+    assert prof, "profiled fixpoint must emit engine.profile.* histograms"
+    total = sum(v["count"] for v in prof.values())
+    assert total >= 2
+    # the second identical call must not land in a compile_ms bucket again:
+    # at most one compile observation per (backend, signature)
+    compiles = sum(v["count"] for k, v in prof.items()
+                   if k.endswith(".compile_ms"))
+    executes = sum(v["count"] for k, v in prof.items()
+                   if k.endswith(".execute_ms"))
+    assert executes >= 1
+    assert compiles <= total - 1
+    rep = obs.profile_report()
+    assert "engine profile" in rep
+    assert "execute_ms" in rep
+
+
+def test_profile_frontier_round_phases():
+    obs.reset()
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 256, 2048).astype(np.int32)
+    dst = rng.integers(0, 256, 2048).astype(np.int32)
+    g = Graph.from_edges(src, dst)
+    A.bfs(g, 0, backend="frontier")
+    snap = obs.dump_metrics()
+    rounds = snap.get("engine.frontier.rounds", {}).get("value", 0)
+    assert rounds >= 1
+    timed = sum(snap[k]["count"] for k in
+                ("engine.profile.frontier.dense_ms",
+                 "engine.profile.frontier.sparse_ms") if k in snap)
+    assert timed == rounds, "every frontier round gets a timed phase"

@@ -570,3 +570,54 @@ def test_chrome_trace_writes_local_file(served, tmp_path):
     doc = client.chrome_trace(trace=p.trace, path=str(path))
     assert _json.loads(path.read_text()) == doc
     assert doc["traceEvents"]
+
+
+def test_health_slo_and_bundle_over_the_wire(served, tmp_path):
+    """The acceptance path: a forced-slow request leaves a flight-recorder
+    exemplar that is still retrievable over the wire after the trace ring
+    has wrapped, and the saved bundle renders through the report CLI."""
+    import json as _json
+
+    from repro import obs
+    from repro.obs import report as report_mod
+
+    server, client = served
+    obs.reset()
+    try:
+        obs.SLO.set_objective("bfs", latency_ms=0.0)   # force "slow"
+        sess = client.session("postmortem")
+        p = sess.submit({"op": "bfs", "graph": "g", "params": {"source": 0}})
+        client.flush()
+        p.result(60)
+        # wrap the server-side ring: the request's spans get evicted
+        cap = obs.TRACER._events.maxlen
+        t0 = time.perf_counter()
+        for _ in range(cap + 1):
+            obs.add_complete("pad", t0, t0)
+        assert obs.TRACER.dropped > 0
+        ring = client.chrome_trace(trace=p.trace)["traceEvents"]
+        assert [e for e in ring if e["ph"] == "X"] == []
+
+        health = client.health()
+        assert health["status"] in ("ok", "degraded", "breaching")
+        assert health["ops"]["bfs"]["slow"] >= 1
+        assert isinstance(health["reasons"], list)
+
+        report = client.slo_report()
+        assert report["ops"]["bfs"]["n"] >= 1
+        assert report["ops"]["bfs"]["objective"]["latency_ms"] == 0.0
+
+        path = tmp_path / "bundle.json"
+        bundle = client.debug_bundle(str(path), trace=p.trace)
+        exs = bundle["exemplars"]["bfs"]
+        assert exs[-1]["slow"] is True
+        assert exs[-1]["trace"] == p.trace
+        assert exs[-1]["spans"], "exemplar evidence must survive ring wrap"
+        assert bundle["trace"]["metadata"]["dropped_events"] > 0
+        assert _json.loads(path.read_text()) == bundle
+
+        # the saved artifact renders through `python -m repro.obs.report`
+        assert report_mod.main(["--bundle", str(path)]) == 0
+        assert client.profile_report().startswith("engine profile")
+    finally:
+        obs.reset()
